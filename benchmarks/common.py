@@ -1,0 +1,53 @@
+"""Shared benchmark harness: timed jit calls + the paper's graph suite at
+laptop scale.
+
+The paper's datasets (2.4G-224G edges) are replaced by same-family synthetic
+graphs sized for this container; every benchmark prints CSV
+``name,us_per_call,derived`` so benchmarks.run can aggregate.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+from repro.graphs import (
+    EdgeList, erdos_renyi_graph, grid_graph, rmat_graph,
+)
+
+
+def graph_suite(scale: str = "small") -> Dict[str, EdgeList]:
+    """Graph families mirroring the paper's Table I categories:
+    social/synthetic (RMAT skew), web-like (high locality grid+er mix),
+    uniform random."""
+    if scale == "large":
+        return {
+            "rmat18": rmat_graph(18, 16, seed=1),          # ~4.2M edges
+            "er_4m": erdos_renyi_graph(2**18, 2**22, seed=2),
+            "grid_1k": grid_graph(1024, 1024),             # ~2.1M edges, high locality
+        }
+    return {
+        "rmat14": rmat_graph(14, 16, seed=1),              # ~262k edges
+        "er_256k": erdos_renyi_graph(2**14, 2**18, seed=2),
+        "grid_256": grid_graph(256, 256),                  # ~131k edges
+    }
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (seconds) of a jit'd call, post-warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = "") -> str:
+    line = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,54 @@
+"""Kernel micro-benchmarks: the Pallas matcher's pure-jnp twin (the kernel
+itself runs in interpret mode on CPU — timing it would measure the Python
+interpreter, so we time the algorithmically identical ref path and the
+MoE matching router which is the technique's in-framework hot spot)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.bipartite import bmatch_assign
+from repro.kernels.skipper_match.ref import ref_match_window
+
+
+def run(scale: str = "small"):
+    rows = []
+    # windowed matcher throughput (edges/s) across tile sizes
+    rng = np.random.default_rng(0)
+    w, m = 2048, 1 << 16
+    u = jnp.asarray(rng.integers(0, w, m), jnp.int32)
+    v = jnp.asarray(rng.integers(0, w, m), jnp.int32)
+    st0 = jnp.zeros((w,), jnp.int32)
+    for tile in (128, 256, 512):
+        ut = u.reshape(-1, tile)
+        vt = v.reshape(-1, tile)
+        t = time_call(lambda: ref_match_window(ut, vt, st0)[1])
+        rows.append(emit(f"kernel/window_match/tile{tile}", t,
+                         f"{m / t / 1e6:.1f}Medges_s"))
+
+    # MoE matching router: tokens x experts
+    for n_tok, n_exp, k in ((4096, 8, 2), (4096, 40, 8)):
+        kp = min(n_exp, k + 2)
+        scores = jax.random.normal(jax.random.PRNGKey(1), (n_tok, n_exp))
+        vals, idx = jax.lax.top_k(scores, kp)
+        tok = jnp.repeat(jnp.arange(n_tok, dtype=jnp.int32), kp)
+        exp = idx.reshape(-1).astype(jnp.int32)
+        order = jnp.argsort(-vals.reshape(-1))
+        cap = int(n_tok * k / n_exp * 1.25)
+
+        def assign():
+            return bmatch_assign(
+                tok[order], exp[order], num_tokens=n_tok, num_experts=n_exp,
+                token_budget=k, expert_capacity=cap,
+            )
+
+        t = time_call(assign)
+        rows.append(emit(f"kernel/moe_router/t{n_tok}_e{n_exp}_k{k}", t,
+                         f"{n_tok / t / 1e6:.2f}Mtok_s"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark aggregator: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV lines (benchmarks.common.emit).
+
+  table1_speedup    — Table I: Skipper vs SIDMM wall time (+SGMM ref)
+  fig7_work         — Fig. 7: memory accesses per edge
+  fig10_gain        — Fig. 10/11: serial slowdown vs SGMM
+  table2_conflicts  — Table II: JIT conflict statistics (+distributed)
+  kernel_bench      — matcher/router throughput micro-benches
+  packing_bench     — matching-based sequence packing quality
+
+Run ``--scale large`` for the multi-million-edge suite (slower).
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small", choices=["small", "large"])
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        table1_speedup, fig7_work, fig10_gain, table2_conflicts,
+        kernel_bench, packing_bench,
+    )
+
+    modules = {
+        "table1": table1_speedup,
+        "fig7": fig7_work,
+        "fig10": fig10_gain,
+        "table2": table2_conflicts,
+        "kernels": kernel_bench,
+        "packing": packing_bench,
+    }
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run(args.scale)
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR:{type(e).__name__}", flush=True)
+    if failed:
+        sys.exit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: Skipper maximal matching on a graph, validated, with the
+paper's headline comparisons reproduced in miniature.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    sgmm, skipper, sidmm, check_matching, conflict_table,
+)
+from repro.core.distributed import distributed_skipper
+from repro.graphs import rmat_graph
+from repro.kernels.skipper_match import skipper_match
+
+
+def main():
+    # a Graph500-style RMAT graph (the paper's g500 family), ~1M edges
+    g = rmat_graph(scale=14, edge_factor=16, seed=0)
+    print(f"graph: |V|={g.num_vertices:,} |E|={g.num_edges:,}")
+
+    # 1. single-pass Skipper (vectorized tiles, JIT conflict resolution)
+    result, conflicts = skipper(g, tile_size=512, with_conflicts=True)
+    stats = {k: v.item() for k, v in check_matching(g, result.match_mask).items()}
+    print(f"skipper: {stats['num_matches']:,} matches | valid={stats['valid']} "
+          f"maximal={stats['maximal']}")
+    print(f"  accesses/edge = {float(result.counters.total_accesses)/g.num_edges:.2f} "
+          f"(paper band: 1.2-3.4), single pass")
+
+    tbl = conflict_table(np.asarray(conflicts))
+    print(f"  JIT conflicts: {tbl['total_cnf']} on {tbl['edges_exp_cnf']} edges "
+          f"(ratio {tbl['conflict_ratio']:.5f} — paper: <0.1%)")
+
+    # 2. the baselines it beats
+    r_sgmm = sgmm(g)
+    r_sidmm = sidmm(g, batch_size=4096)
+    print(f"sgmm:   {int(r_sgmm.num_matches):,} matches, "
+          f"{float(r_sgmm.counters.total_accesses)/g.num_edges:.2f} accesses/edge")
+    print(f"sidmm:  {int(r_sidmm.num_matches):,} matches, "
+          f"{float(r_sidmm.counters.total_accesses)/g.num_edges:.2f} accesses/edge, "
+          f"{int(r_sidmm.counters.rounds)} rounds (vs skipper's single pass)")
+
+    # 3. multi-device Skipper (devices = the paper's threads)
+    result_d, dstats = distributed_skipper(g, block_size=512)
+    stats_d = {k: v.item() for k, v in check_matching(g, result_d.match_mask).items()}
+    print(f"distributed: {stats_d['num_matches']:,} matches | "
+          f"proposals={int(dstats.proposals):,} lost={int(dstats.lost_proposals)} "
+          f"requeued={int(dstats.requeued)}")
+
+    # 4. the Pallas TPU kernel (interpret mode on CPU)
+    small = rmat_graph(scale=11, edge_factor=8, seed=1)
+    r_k = skipper_match(small, window=1024, tile_size=128)
+    s_k = {k: v.item() for k, v in check_matching(small, r_k.match_mask).items()}
+    print(f"pallas kernel (|E|={small.num_edges:,}): {s_k['num_matches']:,} matches | "
+          f"valid={s_k['valid']} maximal={s_k['maximal']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Batched serving demo: prefill + decode with continuous slot refill over
+the qwen1.5-0.5b smoke config.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import serve
+
+
+def main():
+    outputs = serve(
+        "qwen1.5-0.5b", smoke=True,
+        num_requests=8, slots=4, prompt_len=32, max_new=12,
+    )
+    for rid, toks in sorted(outputs.items()):
+        print(f"request {rid}: {len(toks)} tokens -> {toks[:8]}{'...' if len(toks) > 8 else ''}")
+
+
+if __name__ == "__main__":
+    main()

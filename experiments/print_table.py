@@ -1,0 +1,31 @@
+"""Render the roofline baseline table from experiments/dryrun/*.json."""
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def main():
+    rows = []
+    for p in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        r = json.load(open(p))
+        if r.get("ok"):
+            rows.append(r)
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':8s} {'hbm(corr)':>10s} {'fit':>3s} "
+           f"{'dom':>10s} {'t_c ms':>9s} {'t_m ms':>10s} {'t_x ms':>10s} {'useful':>6s} {'mb':>2s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        corr = r.get("hbm_gib_tpu_corrected", r["hbm_gib"])
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} {corr:9.2f}G "
+              f"{'Y' if r['fits_hbm'] else 'N':>3s} {r['dominant']:>10s} "
+              f"{r['compute_s']*1e3:9.2f} {r['memory_s']*1e3:10.2f} "
+              f"{r['collective_s']*1e3:10.2f} {(r['useful_flops_ratio'] or 0):6.3f} "
+              f"{r.get('microbatches', 1):>2d}")
+    bad = [f"{r['arch']}/{r['shape']}/{r['mesh']}" for r in rows if not r["fits_hbm"]]
+    print(f"\ncells: {len(rows)}; not fitting (corrected): {bad if bad else 'none'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig, SHAPES
+from repro.configs.registry import (
+    ARCH_IDS,
+    get_config,
+    get_smoke_config,
+    get_shape,
+    runnable_cells,
+)
+
+__all__ = [
+    "ModelConfig", "ShapeConfig", "TrainConfig", "SHAPES",
+    "ARCH_IDS", "get_config", "get_smoke_config", "get_shape", "runnable_cells",
+]

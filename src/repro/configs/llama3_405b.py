@@ -1,0 +1,20 @@
+"""llama3-405b [dense] — 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256. [arXiv:2407.21783; unverified]
+opt_state_dtype=bf16: at 405B params, f32 Adam moments alone exceed a
+256-chip v5e pod's HBM; bf16 moments (the production trick, cf. FSDP
+implementations with 16-bit optimizer state) bring train_4k under budget
+(dry-run memory analysis in EXPERIMENTS.md)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b", family="dense",
+    num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+    d_ff=53248, vocab_size=128256,
+    rope_theta=5e5, opt_state_dtype="bfloat16", seq_sharded_residual=True,
+)
+
+SMOKE = ModelConfig(
+    name="llama3-405b-smoke", family="dense",
+    num_layers=3, d_model=128, num_heads=8, num_kv_heads=2,
+    d_ff=256, vocab_size=512, dtype="float32", remat=False,
+)

@@ -1,0 +1,64 @@
+"""Architecture registry: --arch <id> resolves here.
+
+Each assigned architecture has its own module with the exact published
+config; this registry maps ids to (ModelConfig, reduced smoke ModelConfig).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeConfig
+
+ARCH_IDS = [
+    "granite-moe-3b-a800m",
+    "mixtral-8x7b",
+    "qwen2-vl-2b",
+    "llama3-405b",
+    "qwen1.5-110b",
+    "llama3.2-1b",
+    "qwen1.5-0.5b",
+    "whisper-large-v3",
+    "zamba2-2.7b",
+    "mamba2-130m",
+]
+
+_MODULES = {
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "llama3-405b": "llama3_405b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen1.5-0.5b": "qwen1_5_0_5b",
+    "whisper-large-v3": "whisper_large_v3",
+    "zamba2-2.7b": "zamba2_2_7b",
+    "mamba2-130m": "mamba2_130m",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.SMOKE
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def runnable_cells() -> Dict[str, Tuple[str, ...]]:
+    """(arch -> shapes) skip matrix: long_500k only for sub-quadratic archs
+    (DESIGN.md §6)."""
+    out = {}
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        shapes = ["train_4k", "prefill_32k", "decode_32k"]
+        if cfg.subquadratic:
+            shapes.append("long_500k")
+        out[arch] = tuple(shapes)
+    return out

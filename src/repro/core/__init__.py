@@ -1,0 +1,27 @@
+"""Core: the paper's contribution — single-pass maximal matching with JIT
+conflict resolution — plus the baselines it is evaluated against.
+"""
+from repro.core.types import ACC, RSVD, MCHD, Counters, MatchResult
+from repro.core.sgmm import sgmm
+from repro.core.skipper import skipper
+from repro.core.ems import ems_israeli_itai, ems_idmm, sidmm
+from repro.core.validate import check_matching, assert_matching
+from repro.core.bipartite import bmatch_assign
+from repro.core.conflicts import conflict_table
+
+__all__ = [
+    "ACC",
+    "RSVD",
+    "MCHD",
+    "Counters",
+    "MatchResult",
+    "sgmm",
+    "skipper",
+    "ems_israeli_itai",
+    "ems_idmm",
+    "sidmm",
+    "check_matching",
+    "assert_matching",
+    "bmatch_assign",
+    "conflict_table",
+]

@@ -1,0 +1,283 @@
+"""Multi-device Skipper via shard_map — devices play the paper's threads.
+
+Protocol per round (DESIGN.md §2 level 1; paper Alg. 1 adapted to SPMD):
+
+  1. LOCAL PASS — each device greedily matches its next dispersed edge block
+     (plus its retry buffer) against its replica of the vertex-state array,
+     exactly like a paper thread scanning its blocks. Local commits are
+     *proposals* — the analogue of holding RSVD on both endpoints.
+  2. GATHER — one all_gather moves the per-device proposal blocks (tiny:
+     O(block) ints, no topology) to every device.
+  3. REPLAY — every device applies the gathered proposals in the same
+     deterministic position-major order with the same first-claim tile pass.
+     Winners become MCHD everywhere (the committed state stays replicated-
+     consistent); a proposal loses only if an endpoint was taken by an
+     earlier-priority winner — i.e. the edge is *dead by MCHD endpoint*,
+     Skipper's invariant.
+  4. REQUEUE — edges the local pass killed via a *provisional* claim whose
+     claimant then lost, and are still free post-replay, enter the retry
+     buffer for the next round (the analogue of spinning on RSVD). Θ(λ²)-rare.
+
+Each edge is decided exactly once except the rare requeues: total expected
+work O(|E|/D + conflicts) per device, O(|E| + conflicts) aggregate — the
+paper's single-pass property at block granularity.
+
+Cross-pod: the all_gather composes over ("pod", "data") axes; proposal bytes
+per round are independent of |E| (the paper's "conflict resolution touches no
+topology").
+
+Output is deterministic given (D, block_size) — see DESIGN.md assumption log.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.types import ACC, MCHD, STATE_DTYPE, Counters, MatchResult
+from repro.core.skipper import tile_pass
+from repro.graphs.types import EdgeList
+from repro.graphs.partition import dispersed_blocks
+
+
+@dataclasses.dataclass(frozen=True)
+class DistStats:
+    """Per-run distributed accounting (aggregated over devices)."""
+
+    proposals: jax.Array        # total proposals sent
+    lost_proposals: jax.Array   # proposals that lost replay (cross-device JIT conflicts)
+    requeued: jax.Array         # edges requeued (spin-wait analogue)
+    retry_overflow: jax.Array   # edges dropped by a full retry buffer (must be 0)
+    undrained: jax.Array        # retry entries alive after drain rounds (must be 0)
+    gathered_ints: jax.Array    # collective payload (int32 count) over the run
+
+
+def _local_pass(state, u, v, *, n, vector_rounds, tile_size):
+    """Greedy pass of a [L]-sized slab in tiles. Returns (post local state,
+    matched mask)."""
+    l = u.shape[0]
+    num_tiles = l // tile_size
+    ut = u.reshape(num_tiles, tile_size)
+    vt = v.reshape(num_tiles, tile_size)
+
+    def step(st, uv):
+        uu, vv = uv
+        st, matched, _, _ = tile_pass(st, uu, vv, n=n, vector_rounds=vector_rounds)
+        return st, matched
+
+    state, matched = jax.lax.scan(step, state, (ut, vt))
+    return state, matched.reshape(-1)
+
+
+def _replay(state, u, v, *, n, vector_rounds, tile_size):
+    """Deterministic first-claim replay of the gathered proposal stream."""
+    return _local_pass(state, u, v, n=n, vector_rounds=vector_rounds, tile_size=tile_size)
+
+
+def distributed_skipper_fn(
+    u_blocks: jax.Array,   # [R, B] this device's dispersed blocks
+    v_blocks: jax.Array,
+    i_blocks: jax.Array,   # [R, B] global stream indices
+    *,
+    num_vertices: int,
+    num_edges_padded: int,
+    axis_name: str,
+    num_devices: int,
+    vector_rounds: int,
+    tile_size: int,
+    drain_rounds: int,
+) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, ...]]:
+    """Body executed per device under shard_map."""
+    n = num_vertices
+    # shard_map delivers the device-sharded leading axis as size 1: squeeze.
+    u_blocks = u_blocks.reshape(u_blocks.shape[-2:])
+    v_blocks = v_blocks.reshape(v_blocks.shape[-2:])
+    i_blocks = i_blocks.reshape(i_blocks.shape[-2:])
+    rounds, block = u_blocks.shape
+    cap = block  # retry buffer capacity
+
+    slab = block + cap  # edges examined per round
+    # pad slab to tile multiple
+    slab_pad = (-slab) % tile_size
+    slab_t = slab + slab_pad
+
+    def one_round(carry, blk):
+        state, mask, ru, rv, ri, rcount, stats = carry
+        bu, bv, bi = blk
+
+        # 1. LOCAL PASS on [retry ++ block]
+        u = jnp.concatenate([ru, bu, jnp.full((slab_pad,), -1, jnp.int32)])
+        v = jnp.concatenate([rv, bv, jnp.full((slab_pad,), -1, jnp.int32)])
+        idx = jnp.concatenate([ri, bi, jnp.full((slab_pad,), -1, jnp.int32)])
+        local_state, proposed = _local_pass(
+            state, u, v, n=n, vector_rounds=vector_rounds, tile_size=tile_size
+        )
+        valid = (u >= 0) & (u != v)
+        # dead w.r.t. the committed (pre-round) state — permanent
+        sgu = state[jnp.clip(u, 0, n - 1)]
+        sgv = state[jnp.clip(v, 0, n - 1)]
+        dead_global = valid & (~proposed) & ((sgu == MCHD) | (sgv == MCHD))
+        dead_prov = valid & (~proposed) & (~dead_global)
+
+        # 2. GATHER proposals (u,v,idx; -1 where not proposed)
+        pu = jnp.where(proposed, u, -1)
+        pv = jnp.where(proposed, v, -1)
+        pi = jnp.where(proposed, idx, -1)
+        gu = jax.lax.all_gather(pu, axis_name)  # [D, slab_t]
+        gv = jax.lax.all_gather(pv, axis_name)
+        gi = jax.lax.all_gather(pi, axis_name)
+        # position-major (round-robin across devices) deterministic order
+        gu = gu.T.reshape(-1)
+        gv = gv.T.reshape(-1)
+        gi = gi.T.reshape(-1)
+
+        # 3. REPLAY on the committed state
+        new_state, winners = _replay(
+            state, gu, gv, n=n, vector_rounds=vector_rounds, tile_size=tile_size
+        )
+        mask = mask.at[jnp.where(winners, gi, num_edges_padded)].set(
+            True, mode="drop"
+        )
+
+        # 4. REQUEUE provisional-dead edges that are still free post-replay
+        snu = new_state[jnp.clip(u, 0, n - 1)]
+        snv = new_state[jnp.clip(v, 0, n - 1)]
+        requeue = dead_prov & (snu == ACC) & (snv == ACC)
+        # compact requeued edges to the front of the retry buffer
+        order = jnp.argsort(~requeue)  # True (=0 after ~) first
+        ru_n = jnp.where(requeue[order], u[order], -1)[:cap]
+        rv_n = jnp.where(requeue[order], v[order], -1)[:cap]
+        ri_n = jnp.where(requeue[order], idx[order], -1)[:cap]
+        nreq = jnp.sum(requeue)
+        overflow = jnp.maximum(nreq - cap, 0)
+
+        n_props = jnp.sum(proposed)
+        # stats: proposals, lost, requeued, overflow, undrained, gathered ints
+        props, lost, req, ovf, und, gints = stats
+        stats = (
+            props + n_props,
+            lost,  # derived as (proposals - matches) at the host level
+            req + nreq,
+            ovf + overflow,
+            und,
+            gints + 3 * slab_t * num_devices,
+        )
+        return (new_state, mask, ru_n, rv_n, ri_n, rcount, stats), jnp.sum(winners)
+
+    state0 = jnp.full((n,), ACC, STATE_DTYPE)
+    mask0 = jnp.zeros((num_edges_padded,), jnp.bool_)
+    empty = jnp.full((cap,), -1, jnp.int32)
+    z = jnp.zeros((), jnp.int32)
+    stats0 = (z, z, z, z, z, z)
+    carry0 = (state0, mask0, empty, empty, empty, z, stats0)
+
+    carry, _ = jax.lax.scan(one_round, carry0, (u_blocks, v_blocks, i_blocks))
+
+    # drain: extra rounds with empty blocks until retry buffers settle
+    empty_blk = (
+        jnp.full((drain_rounds, block), -1, jnp.int32),
+        jnp.full((drain_rounds, block), -1, jnp.int32),
+        jnp.full((drain_rounds, block), -1, jnp.int32),
+    )
+    carry, _ = jax.lax.scan(one_round, carry, empty_blk)
+
+    state, mask, ru, rv, ri, _, stats = carry
+    props, lost, req, ovf, und, gints = stats
+    und = und + jnp.sum(ru >= 0)
+
+    # aggregate stats over devices
+    agg = lambda x: jax.lax.psum(x, axis_name)
+    stats_out = (
+        agg(props),
+        lost,  # computed at host level (global winners vs proposals)
+        agg(req),
+        agg(ovf),
+        agg(und),
+        gints,  # identical on every device already
+    )
+    return state, mask, stats_out
+
+
+def distributed_skipper(
+    edges: EdgeList,
+    mesh: Optional[Mesh] = None,
+    axis_name: str = "data",
+    block_size: int = 512,
+    vector_rounds: int = 2,
+    tile_size: int = 256,
+    drain_rounds: int = 4,
+) -> Tuple[MatchResult, DistStats]:
+    """Run Skipper across the devices of ``mesh`` along ``axis_name``.
+
+    Works for any device count >= 1 (D=1 degenerates to the single-device
+    tiled matcher plus a no-op replay).
+    """
+    if mesh is None:
+        devs = jax.devices()
+        mesh = jax.make_mesh(
+            (len(devs),), (axis_name,),
+            axis_types=(jax.sharding.AxisType.Auto,),
+        )
+    if isinstance(mesh.shape, dict):
+        num_devices = mesh.shape[axis_name]
+    else:  # pragma: no cover
+        num_devices = dict(zip(mesh.axis_names, mesh.shape))[axis_name]
+
+    n = edges.num_vertices
+    m = edges.num_edges
+    e = edges.canonical()
+    ub, vb = dispersed_blocks(e, num_devices, block_size)  # [D, R, B]
+    num_rounds = ub.shape[1]
+    num_edges_padded = num_devices * num_rounds * block_size
+    # global stream index of (d, r, b) = ((r * D) + d) * B + b
+    d_ids = jnp.arange(num_devices, dtype=jnp.int32)[:, None, None]
+    r_ids = jnp.arange(num_rounds, dtype=jnp.int32)[None, :, None]
+    b_ids = jnp.arange(block_size, dtype=jnp.int32)[None, None, :]
+    ib = (r_ids * num_devices + d_ids) * block_size + b_ids
+
+    fn = partial(
+        distributed_skipper_fn,
+        num_vertices=n,
+        num_edges_padded=num_edges_padded,
+        axis_name=axis_name,
+        num_devices=num_devices,
+        vector_rounds=vector_rounds,
+        tile_size=tile_size,
+        drain_rounds=drain_rounds,
+    )
+    shard = jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=(P(None), P(None), (P(),) * 6),
+        check_vma=False,
+    )
+    state, mask_padded, stats = jax.jit(shard)(ub, vb, ib)
+
+    # map padded-stream mask back to the original edge order:
+    # stream position of original edge k is k (dispersed_blocks keeps stream
+    # order: block index = k // B, position = k % B)
+    mask = mask_padded[:m]
+    props, _, req, ovf, und, gints = stats
+    n_match = jnp.sum(mask)
+    lost = props - n_match  # proposals that did not win the replay
+    counters = Counters(
+        edge_reads=jnp.asarray(m, jnp.int32),
+        state_loads=jnp.asarray(2 * m, jnp.int32) + 2 * req,
+        state_stores=2 * n_match.astype(jnp.int32),
+        rounds=jnp.asarray(1, jnp.int32),
+    )
+    result = MatchResult(match_mask=mask, state=state, counters=counters)
+    dstats = DistStats(
+        proposals=props,
+        lost_proposals=lost,
+        requeued=req,
+        retry_overflow=ovf,
+        undrained=und,
+        gathered_ints=gints,
+    )
+    return result, dstats

@@ -1,0 +1,203 @@
+"""Skipper maximal matching — TPU-native adaptation (single device).
+
+The paper's per-edge CAS loop (Alg. 1) has no TPU equivalent: a TPU core runs
+one sequential program; there are no asynchronous threads to race, and Pallas
+TPU exposes no CAS. What survives the port is the *invariant* the CAS protocol
+enforces:
+
+    every edge is decided (matched / dead) at the moment it is touched, and an
+    edge is dead only if one of its endpoints is already MCHD.
+
+We enforce the same invariant with vectorized *first-claim* conflict
+resolution over VMEM-sized tiles of the edge stream:
+
+  tile round (vectorized, VPU):
+    free_i    = both endpoints ACC and edge undecided
+    blocked_i = ∃ j<i in the tile: free_j and edges i,j share an endpoint
+    commit_i  = free_i and not blocked_i       # mutually endpoint-disjoint!
+    scatter MCHD to endpoints of committed edges
+
+``blocked`` is the tile-local JIT conflict: the vector analogue of finding a
+vertex RSVD and waiting a few cycles. A blocked edge is *not* requeued into
+future passes — it is retried in the next unrolled round of the *same tile*
+(a few vector ops later), after which either it commits or an endpoint is
+MCHD and it dies. The lowest-index free edge of any conflict chain is never
+blocked, so each round makes progress; after ``vector_rounds`` rounds the rare
+survivors (long dependency chains inside one tile) fall back to an exact
+sequential scan guarded by ``lax.cond`` — the analogue of the paper's
+worst-case "reduced parallelism only when JIT conflicts happen" (§IV-B).
+
+Single pass over edges: each tile is loaded once; total work
+O(|E| + conflicts), state is one uint8 per vertex. Determinism: given the tile
+schedule the output is deterministic (unlike the CPU original — see DESIGN.md
+§2 assumption log).
+
+Scheduling (``dispersed=True``): the paper's thread-dispersed
+locality-preserving schedule (§IV-C) maps onto the vector lanes — lane l of
+the tile stream walks its own *contiguous* block of edges (locality
+preserved per lane), while the lanes of any one tile sit in blocks far apart
+in the stream (dispersed), which is what makes intra-tile endpoint sharing —
+the JIT-conflict source — Θ(λ²)-rare. Without it (``dispersed=False``) a tile
+holds consecutive edges, and high-locality inputs (grids, paths) conflict on
+every chain; that mode exists to reproduce the paper's argument that the
+scheduler matters.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ACC, MCHD, STATE_DTYPE, Counters, MatchResult
+from repro.graphs.types import EdgeList
+from repro.graphs.partition import pad_edges
+
+
+def _share_matrix(u: jax.Array, v: jax.Array, valid: jax.Array) -> jax.Array:
+    """conflict[i, j] = True iff j < i, both valid, and edges share an endpoint."""
+    t = u.shape[0]
+    share = (
+        (u[:, None] == u[None, :])
+        | (u[:, None] == v[None, :])
+        | (v[:, None] == u[None, :])
+        | (v[:, None] == v[None, :])
+    )
+    lower = jnp.tril(jnp.ones((t, t), jnp.bool_), k=-1)
+    return share & lower & valid[None, :] & valid[:, None]
+
+
+def tile_pass(
+    state: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    *,
+    n: int,
+    vector_rounds: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Process one edge tile (first-claim vector rounds + exact sequential
+    fallback). Shared by the single-device matcher, the distributed replay,
+    and the kernels' reference path.
+
+    Returns (state, matched, conflicts_per_edge, fallback_taken)."""
+    t = u.shape[0]
+    valid = (u != v) & (u >= 0)
+    conflict = _share_matrix(u, v, valid)
+
+    matched = jnp.zeros((t,), jnp.bool_)
+    conflicts = jnp.zeros((t,), jnp.int32)
+
+    def gather_state(idx):
+        return state[jnp.where(valid, idx, 0)]
+
+    for _ in range(vector_rounds):
+        su = state[jnp.where(valid, u, 0)]
+        sv = state[jnp.where(valid, v, 0)]
+        free = valid & (~matched) & (su == ACC) & (sv == ACC)
+        blocked = jnp.any(conflict & free[None, :], axis=1) & free
+        commit = free & ~blocked
+        state = state.at[jnp.where(commit, u, n)].set(MCHD, mode="drop")
+        state = state.at[jnp.where(commit, v, n)].set(MCHD, mode="drop")
+        matched = matched | commit
+        conflicts = conflicts + blocked.astype(jnp.int32)
+
+    # Exact sequential fallback for pathological chains (rare): guarded so the
+    # scan body only runs when some edge is still undecided-and-free.
+    su = state[jnp.where(valid, u, 0)]
+    sv = state[jnp.where(valid, v, 0)]
+    remaining = valid & (~matched) & (su == ACC) & (sv == ACC)
+
+    def fallback(args):
+        state, matched = args
+
+        def fstep(st, uvr):
+            uu, vv, rem = uvr
+            s1 = st[jnp.where(rem, uu, 0)]
+            s2 = st[jnp.where(rem, vv, 0)]
+            take = rem & (s1 == ACC) & (s2 == ACC)
+            st = st.at[jnp.where(take, uu, n)].set(MCHD, mode="drop")
+            st = st.at[jnp.where(take, vv, n)].set(MCHD, mode="drop")
+            return st, take
+
+        state, extra = jax.lax.scan(fstep, state, (u, v, remaining))
+        return state, matched | extra
+
+    state, matched = jax.lax.cond(
+        jnp.any(remaining), fallback, lambda args: args, (state, matched)
+    )
+    return state, matched, conflicts, jnp.any(remaining)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("tile_size", "vector_rounds", "with_conflicts", "dispersed"),
+)
+def skipper(
+    edges: EdgeList,
+    tile_size: int = 512,
+    vector_rounds: int = 3,
+    with_conflicts: bool = False,
+    dispersed: bool = True,
+) -> Tuple[MatchResult, Optional[jax.Array]]:
+    """Single-pass tiled Skipper. Returns (MatchResult, conflicts_per_edge?).
+
+    conflicts_per_edge (int32[|E|]) is returned when ``with_conflicts`` — the
+    Table II instrumentation (number of rounds each edge spent blocked).
+    """
+    n = edges.num_vertices
+    m = edges.num_edges
+    e = pad_edges(edges.canonical(), tile_size)
+    num_tiles = e.num_edges // tile_size
+    if dispersed:
+        # lane l <- contiguous block l of the stream; tile t = column t.
+        ut = e.u.reshape(tile_size, num_tiles).T
+        vt = e.v.reshape(tile_size, num_tiles).T
+    else:
+        ut = e.u.reshape(num_tiles, tile_size)
+        vt = e.v.reshape(num_tiles, tile_size)
+
+    init_state = jnp.full((n,), ACC, STATE_DTYPE)
+
+    def tile_step(carry, uv):
+        state, loads, stores, fallbacks = carry
+        u, v = uv
+        state, matched, conflicts, fb = tile_pass(
+            state, u, v, n=n, vector_rounds=vector_rounds
+        )
+        valid = (u != v) & (u >= 0)
+        nvalid = jnp.sum(valid).astype(jnp.int32)
+        ncommit = jnp.sum(matched).astype(jnp.int32)
+        nconf = jnp.sum(conflicts).astype(jnp.int32)
+        # loads: round 0 touches every valid edge's 2 endpoints; later rounds
+        # only re-touch edges that were blocked (what a real implementation
+        # re-reads while "waiting").
+        loads = loads + 2 * nvalid + 2 * nconf
+        stores = stores + 2 * ncommit
+        fallbacks = fallbacks + fb.astype(jnp.int32)
+        return (state, loads, stores, fallbacks), (matched, conflicts)
+
+    carry0 = (
+        init_state,
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32),
+    )
+    (state, loads, stores, _fb), (matched, conflicts) = jax.lax.scan(
+        tile_step, carry0, (ut, vt)
+    )
+    if dispersed:
+        # matched[t, l] corresponds to stream index l * num_tiles + t
+        mask = matched.T.reshape(-1)[:m]
+        conflicts = conflicts.T.reshape(-1)[:m]
+    else:
+        mask = matched.reshape(-1)[:m]
+        conflicts = conflicts.reshape(-1)[:m]
+    counters = Counters(
+        edge_reads=jnp.asarray(m, jnp.int32),
+        state_loads=loads,
+        state_stores=stores,
+        rounds=jnp.asarray(1, jnp.int32),
+    )
+    result = MatchResult(match_mask=mask, state=state, counters=counters)
+    return result, (conflicts if with_conflicts else None)

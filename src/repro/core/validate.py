@@ -1,0 +1,47 @@
+"""Matching output validation (paper §II-B):
+
+  (a) validity  — no two selected edges share an endpoint;
+  (b) maximality — every (non-self, non-duplicate-dead) edge shares an
+      endpoint with a selected edge.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.types import EdgeList
+
+
+@jax.jit
+def check_matching(edges: EdgeList, match_mask: jax.Array) -> Dict[str, jax.Array]:
+    e = edges.canonical()
+    n = e.num_vertices
+    valid = (e.u != e.v) & (e.u >= 0)
+    mask = match_mask & valid
+
+    inc = jnp.zeros((n + 1,), jnp.int32)
+    inc = inc.at[jnp.where(mask, e.u, n)].add(1, mode="drop")
+    inc = inc.at[jnp.where(mask, e.v, n)].add(1, mode="drop")
+    inc = inc[:n]
+    is_valid = jnp.all(inc <= 1)
+
+    covered = inc > 0
+    cov_u = covered[jnp.where(valid, e.u, 0)]
+    cov_v = covered[jnp.where(valid, e.v, 0)]
+    is_maximal = jnp.all(~valid | cov_u | cov_v)
+
+    return {
+        "valid": is_valid,
+        "maximal": is_maximal,
+        "num_matches": jnp.sum(mask),
+        "num_covered_vertices": jnp.sum(covered),
+    }
+
+
+def assert_matching(edges: EdgeList, match_mask: jax.Array, label: str = "") -> Dict[str, int]:
+    out = {k: v.item() if hasattr(v, "item") else v for k, v in check_matching(edges, match_mask).items()}
+    assert out["valid"], f"{label}: matching has endpoint collisions"
+    assert out["maximal"], f"{label}: matching is not maximal"
+    return out

@@ -1,0 +1,11 @@
+from repro.data.pipeline import DataConfig, batch_for_step, stream, documents_for_step
+from repro.data.packing import pack_documents, packing_efficiency
+
+__all__ = [
+    "DataConfig",
+    "batch_for_step",
+    "stream",
+    "documents_for_step",
+    "pack_documents",
+    "packing_efficiency",
+]

@@ -1,0 +1,37 @@
+"""Graph substrate: generators, CSR utilities, and edge partitioning.
+
+Graphs are represented in COO form as an ``EdgeList`` (two int32 arrays ``u``,
+``v`` plus ``num_vertices``) — the natural input format for Skipper, which the
+paper notes needs neither symmetrization nor CSR (Section V-C, "Input Format &
+Symmetrization"). CSR conversion is provided for the SIDMM/EMS baselines that
+are vertex-centric.
+"""
+from repro.graphs.types import EdgeList, CSRGraph
+from repro.graphs.generators import (
+    rmat_graph,
+    erdos_renyi_graph,
+    grid_graph,
+    ring_graph,
+    star_graph,
+    bipartite_graph,
+    path_graph,
+)
+from repro.graphs.csr import edges_to_csr, symmetrize, dedup_edges
+from repro.graphs.partition import dispersed_blocks, pad_edges
+
+__all__ = [
+    "EdgeList",
+    "CSRGraph",
+    "rmat_graph",
+    "erdos_renyi_graph",
+    "grid_graph",
+    "ring_graph",
+    "star_graph",
+    "bipartite_graph",
+    "path_graph",
+    "edges_to_csr",
+    "symmetrize",
+    "dedup_edges",
+    "dispersed_blocks",
+    "pad_edges",
+]

@@ -1,0 +1,54 @@
+"""COO <-> CSR conversion, symmetrization, dedup.
+
+CSR is needed by the vertex-centric EMS/SIDMM baselines (the paper's
+competitors require the symmetrized CSR; Skipper itself does not — §V-C).
+Host-side (numpy): this is data-loading work, not device compute.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graphs.types import EdgeList, CSRGraph
+
+
+def dedup_edges(edges: EdgeList, drop_self_loops: bool = True) -> EdgeList:
+    """Canonicalize (u<=v), drop duplicates (and optionally self loops)."""
+    u, v = edges.to_numpy()
+    lo = np.minimum(u, v)
+    hi = np.maximum(u, v)
+    if drop_self_loops:
+        keep = lo != hi
+        lo, hi = lo[keep], hi[keep]
+    key = lo.astype(np.int64) * np.int64(edges.num_vertices) + hi
+    _, idx = np.unique(key, return_index=True)
+    return EdgeList(
+        jnp.asarray(lo[idx], jnp.int32),
+        jnp.asarray(hi[idx], jnp.int32),
+        edges.num_vertices,
+    )
+
+
+def symmetrize(edges: EdgeList) -> EdgeList:
+    """Return the edge list with both directions present (for CSR baselines)."""
+    u, v = edges.to_numpy()
+    uu = np.concatenate([u, v])
+    vv = np.concatenate([v, u])
+    return EdgeList(jnp.asarray(uu, jnp.int32), jnp.asarray(vv, jnp.int32), edges.num_vertices)
+
+
+def edges_to_csr(edges: EdgeList, symmetric: bool = True) -> CSRGraph:
+    e = symmetrize(edges) if symmetric else edges
+    u, v = e.to_numpy()
+    n = e.num_vertices
+    order = np.argsort(u, kind="stable")
+    u_sorted = u[order]
+    v_sorted = v[order]
+    counts = np.bincount(u_sorted, minlength=n)
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    return CSRGraph(
+        jnp.asarray(offsets, jnp.int32),
+        jnp.asarray(v_sorted, jnp.int32),
+        n,
+    )

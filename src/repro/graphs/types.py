@@ -1,0 +1,76 @@
+"""Core graph container types.
+
+``EdgeList`` is a pytree so it can flow through jit/shard_map boundaries.
+Invalid (padding) edges are encoded as ``u == v == INVALID`` and are skipped by
+every matcher (the paper skips self-loops anyway, Alg. 1 lines 6-7, so padding
+with self-loops at a reserved vertex is free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel vertex id used for padding edges. Matchers skip self-loops, so a
+# padding edge (INVALID, INVALID) is inert.
+INVALID = np.int32(-1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class EdgeList:
+    """COO edge list. ``u`` and ``v`` are int32 arrays of equal length."""
+
+    u: jax.Array
+    v: jax.Array
+    num_vertices: int  # static
+
+    def tree_flatten(self):
+        return (self.u, self.v), (self.num_vertices,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.u.shape[0])
+
+    def canonical(self) -> "EdgeList":
+        """Return with u <= v per edge (paper Alg.1 lines 8-9: min/max)."""
+        lo = jnp.minimum(self.u, self.v)
+        hi = jnp.maximum(self.u, self.v)
+        return EdgeList(lo, hi, self.num_vertices)
+
+    def to_numpy(self) -> Tuple[np.ndarray, np.ndarray]:
+        return np.asarray(self.u), np.asarray(self.v)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Compressed sparse row graph (paper §II-A).
+
+    offsets: int32[|V|+1]; neighbors: int32[|E|].
+    """
+
+    offsets: jax.Array
+    neighbors: jax.Array
+    num_vertices: int
+
+    def tree_flatten(self):
+        return (self.offsets, self.neighbors), (self.num_vertices,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux[0])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.neighbors.shape[0])
+
+    def degree(self, v: int) -> int:
+        return int(self.offsets[v + 1] - self.offsets[v])

@@ -1,0 +1,134 @@
+"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+
+Targets the MXU: grid = (batch, q_heads, q_blocks); each step owns a
+(block_q x head_dim) query tile in VMEM, loops over key/value chunks with the
+online-softmax recurrence, accumulating in f32. KV for the (grouped) head is
+BlockSpec-mapped into VMEM once per (batch, head) and reused across q blocks.
+
+Causal + sliding-window masks are applied with 2-D iota position grids; the
+kv-chunk loop upper bound is trimmed to the causal frontier so past-diagonal
+chunks are never touched (the flash-attention work-skipping trick, which is
+what makes the SWA variant O(S * window)).
+
+Block shapes: block_q x head_dim and block_k x head_dim tiles with
+head_dim in {64, 80, 128} — multiples of 8x128 VREG packing for f32; bf16
+inputs are upcast at the MXU boundary (preferred_element_type=f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(
+    q_ref,   # [1, 1, block_q, d]
+    k_ref,   # [1, 1, S, d]
+    v_ref,   # [1, 1, S, d]
+    o_ref,   # [1, 1, block_q, d]
+    *,
+    block_k: int,
+    sm_scale: float,
+    causal: bool,
+    window: int,   # 0 = disabled; else only attend to last `window` positions
+):
+    block_q = q_ref.shape[2]
+    d = q_ref.shape[3]
+    s = k_ref.shape[2]
+    qi = pl.program_id(2)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    num_kv = s // block_k
+    if causal:
+        # last kv chunk that intersects the causal frontier of this q block
+        hi = jnp.minimum(((qi + 1) * block_q + block_k - 1) // block_k, num_kv)
+    else:
+        hi = num_kv
+
+    def body(j, carry):
+        m_i, l_i, acc = carry
+        k = k_ref[0, 0, pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        scores = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [block_q, block_k]
+        kv_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window > 0:
+            mask &= kv_pos > q_pos - window
+        scores = jnp.where(mask, scores, NEG_INF)
+
+        m_new = jnp.maximum(m_i, jnp.max(scores, axis=1))
+        p = jnp.exp(scores - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return m_new, l_new, acc_new
+
+    if window > 0 and causal:
+        lo = jnp.maximum(qi * block_q - window + 1, 0) // block_k
+    else:
+        lo = 0
+
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    a0 = jnp.zeros((block_q, d), jnp.float32)
+    m_i, l_i, acc = jax.lax.fori_loop(lo, hi, body, (m0, l0, a0))
+
+    l_safe = jnp.where(l_i > 0, l_i, 1.0)
+    o_ref[0, 0] = (acc / l_safe[:, None]).astype(o_ref.dtype)
+
+
+def build_flash_attention(
+    batch: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    seq_len: int,
+    head_dim: int,
+    block_q: int = 128,
+    block_k: int = 128,
+    sm_scale: float | None = None,
+    causal: bool = True,
+    window: int = 0,
+    interpret: bool = True,
+    out_dtype=jnp.bfloat16,
+):
+    assert seq_len % block_q == 0 and seq_len % block_k == 0
+    assert num_q_heads % num_kv_heads == 0
+    group = num_q_heads // num_kv_heads
+    if sm_scale is None:
+        sm_scale = head_dim ** -0.5
+    kernel = functools.partial(
+        flash_attention_kernel,
+        block_k=block_k,
+        sm_scale=sm_scale,
+        causal=causal,
+        window=window,
+    )
+    grid = (batch, num_q_heads, seq_len // block_q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, head_dim), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, seq_len, head_dim), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, seq_len, head_dim), lambda b, h, i: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, head_dim), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(
+            (batch, num_q_heads, seq_len, head_dim), out_dtype
+        ),
+        interpret=interpret,
+    )

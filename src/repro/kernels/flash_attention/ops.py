@@ -1,0 +1,32 @@
+"""Jit'd wrapper for the flash attention Pallas kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import build_flash_attention
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: int = 0,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Drop-in attention: q [B,Hq,S,D], k/v [B,Hkv,S,D] -> [B,Hq,S,D]."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    call = build_flash_attention(
+        b, hq, hkv, s, d,
+        block_q=bq, block_k=bk, sm_scale=sm_scale,
+        causal=causal, window=window, interpret=interpret,
+        out_dtype=q.dtype,
+    )
+    return call(q, k, v)

@@ -1,0 +1,4 @@
+from repro.kernels.skipper_match.ops import skipper_match_window, skipper_match
+from repro.kernels.skipper_match.ref import ref_match_window
+
+__all__ = ["skipper_match_window", "skipper_match", "ref_match_window"]

@@ -1,0 +1,180 @@
+"""Pallas TPU kernel: windowed single-pass greedy matching (Skipper core).
+
+TPU mapping of the paper's hot loop (Alg. 1 lines 5-18). The grid walks edge
+tiles *sequentially per core* — TPU grid semantics — so the vertex-state
+window can live in VMEM across grid steps (constant index_map + input/output
+aliasing) and the algorithm is race-free by construction; the asynchrony of
+the CPU original is re-introduced one level up (across cores/devices, see
+core/distributed.py).
+
+MXU/VPU mapping per tile of T edges over a W-vertex VMEM window:
+
+  * state gather  : one_hot(u, W) @ state — an (T, W) x (W,) contraction; on
+    TPU this hits the MXU instead of serializing into scalar loads. W is the
+    BlockSpec-controlled VMEM working set (W * 4 B for the state vector plus
+    the T x W one-hots).
+  * JIT conflicts : the T x T triangular share matrix (VPU compares) — the
+    vectorized analogue of "observe RSVD, wait a few cycles". Blocked edges
+    retry in the next unrolled round, NOT in a later pass: single pass over
+    edges is preserved.
+  * state scatter : commit vector folded back with one_hot transpose matmuls;
+    committed edges are mutually endpoint-disjoint by construction, so the
+    scatter is conflict-free (the kernel-level linearization point).
+  * fallback      : rare leftover chains resolved by a sequential fori_loop
+    over the tile (scalar path) — bounded, in-VMEM, still same-pass.
+
+Alignment: choose T a multiple of 8*128 lanes / pack (we default T=256) and
+W a multiple of 128 so the one-hot matmuls are MXU-aligned.
+
+States: ACC=0, MCHD=2 (int32 in VMEM; the at-rest array is uint8/vertex — the
+paper's 1 B/vertex claim — converted at the ops.py boundary).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ACC = 0
+MCHD = 2
+
+
+def _one_hot(idx: jax.Array, width: int) -> jax.Array:
+    """Mask-safe one-hot: idx < 0 maps to the zero row. 2-D iota (TPU needs
+    >=2-D iota)."""
+    cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], width), 1)
+    return (cols == idx[:, None]).astype(jnp.int32)
+
+
+def skipper_window_kernel(
+    u_ref,
+    v_ref,
+    state_in_ref,
+    state_ref,
+    matched_ref,
+    conflicts_ref,
+    *,
+    vector_rounds: int,
+    window: int,
+    fallback: bool,
+):
+    """One grid step = one tile of T window-local edges.
+
+    u_ref/v_ref: int32[T] window-local endpoint ids (-1 = padding).
+    state_in_ref: int32[W] initial state (read at step 0 only).
+    state_ref: int32[W] in/out VMEM-resident state window (aliased).
+    matched_ref: int32[T] per-edge decision (1 = matched).
+    conflicts_ref: int32[T] rounds spent blocked (Table II instrumentation).
+    """
+    t = u_ref.shape[0]
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        state_ref[...] = state_in_ref[...]
+
+    u = u_ref[...]
+    v = v_ref[...]
+    valid = (u >= 0) & (u != v)
+
+    # one-hots are reused by every round: gather AND scatter operands.
+    hu = _one_hot(jnp.where(valid, u, -1), window)  # [T, W]
+    hv = _one_hot(jnp.where(valid, v, -1), window)
+
+    # triangular endpoint-sharing matrix (the JIT-conflict detector)
+    share = (
+        (u[:, None] == u[None, :])
+        | (u[:, None] == v[None, :])
+        | (v[:, None] == u[None, :])
+        | (v[:, None] == v[None, :])
+    )
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    lower = cols < rows
+    conflict = share & lower & valid[None, :] & valid[:, None]
+
+    matched = jnp.zeros((t,), jnp.bool_)
+    conflicts = jnp.zeros((t,), jnp.int32)
+
+    for _ in range(vector_rounds):
+        state = state_ref[...]
+        su = hu @ state  # MXU gather
+        sv = hv @ state
+        free = valid & (~matched) & (su == ACC) & (sv == ACC)
+        blocked = jnp.any(conflict & free[None, :], axis=1) & free
+        commit = free & ~blocked
+        # conflict-free scatter: committed edges are endpoint-disjoint
+        ci = commit.astype(jnp.int32)
+        hit = (ci @ hu) + (ci @ hv)  # [W]
+        state_ref[...] = jnp.where(hit > 0, MCHD, state)
+        matched = matched | commit
+        conflicts = conflicts + blocked.astype(jnp.int32)
+
+    if fallback:
+        # exact sequential cleanup of pathological chains (rare)
+        state = state_ref[...]
+        su = hu @ state
+        sv = hv @ state
+        remaining = valid & (~matched) & (su == ACC) & (sv == ACC)
+
+        def body(i, carry):
+            state, matched = carry
+            rem_i = remaining[i]
+            ui = u[i]
+            vi = v[i]
+            s_u = state[jnp.where(rem_i, ui, 0)]
+            s_v = state[jnp.where(rem_i, vi, 0)]
+            take = rem_i & (s_u == ACC) & (s_v == ACC)
+            state = jnp.where(
+                take,
+                state.at[ui].set(MCHD).at[vi].set(MCHD),
+                state,
+            )
+            matched = matched.at[i].set(matched[i] | take)
+            return state, matched
+
+        state, matched = jax.lax.fori_loop(0, t, body, (state, matched))
+        state_ref[...] = state
+
+    matched_ref[...] = matched.astype(jnp.int32)
+    conflicts_ref[...] = conflicts
+
+
+def build_window_matcher(
+    num_tiles: int,
+    tile_size: int,
+    window: int,
+    vector_rounds: int = 3,
+    fallback: bool = True,
+    interpret: bool = True,
+):
+    """Construct the pallas_call for a (num_tiles x tile_size) edge stream
+    over a ``window``-vertex state window."""
+    kernel = functools.partial(
+        skipper_window_kernel,
+        vector_rounds=vector_rounds,
+        window=window,
+        fallback=fallback,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_size,), lambda i: (i,)),       # u tiles
+            pl.BlockSpec((tile_size,), lambda i: (i,)),       # v tiles
+            pl.BlockSpec((window,), lambda i: (0,)),          # initial state
+        ],
+        out_specs=[
+            pl.BlockSpec((window,), lambda i: (0,)),          # state (resident)
+            pl.BlockSpec((tile_size,), lambda i: (i,)),       # matched
+            pl.BlockSpec((tile_size,), lambda i: (i,)),       # conflicts
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((window,), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles * tile_size,), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles * tile_size,), jnp.int32),
+        ],
+        interpret=interpret,
+    )

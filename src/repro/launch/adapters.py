@@ -1,0 +1,229 @@
+"""Per-family adapters: one uniform interface over the model zoo.
+
+  init_fn(key, cfg)                      -> params
+  train_logits(params, batch, cfg)       -> (logits, targets, loss_mask)
+  prefill_fn(params, batch, cfg)         -> (logits, cache)
+  decode_fn(params, cache, tokens, cfg)  -> (logits, cache)
+  input_specs(cfg, shape, mesh)          -> (batch pytree of ShapeDtypeStruct,
+                                             matching sharding pytree)
+
+``input_specs`` is the dry-run contract: weak-type-correct ShapeDtypeStruct
+stand-ins for every model input, shardable, zero allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T, ssm as S, hybrid as H, encdec as E, vlm as V
+from repro.parallel.sharding import rules_for_mesh
+
+VLM_IMAGE_TOKENS = 1024          # stub vision prefix (32x32 grid)
+VLM_GRID = (32, 32)
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def init_fn(key, cfg: ModelConfig):
+    return {
+        "dense": T.init_params, "moe": T.init_params, "vlm": V.init_params,
+        "audio": E.init_params, "ssm": S.init_params, "hybrid": H.init_params,
+    }[cfg.family](key, cfg)
+
+
+def _shifted(tokens: jax.Array, mask: jax.Array):
+    """Next-token targets aligned with the *unsliced* logits: target[t] =
+    token[t+1]; the final position is masked out. Avoids materializing a
+    second [B, S, V] slice of the logits."""
+    targets = jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1
+    )
+    tmask = jnp.concatenate(
+        [mask[:, 1:], jnp.zeros_like(mask[:, :1])], axis=1
+    )
+    return targets, tmask
+
+
+def train_hidden(params, batch: Dict[str, Any], cfg: ModelConfig):
+    """-> (hidden [B,S,D], head weight, transpose_head, targets, loss_mask).
+
+    The loss path never materializes the full [B, S, V] logits: the head
+    projection + CE run chunked over the sequence (steps.chunked_ce)."""
+    if cfg.family in ("dense", "moe"):
+        hidden, head = T.forward(params, batch["tokens"], cfg, return_hidden=True)
+        targets, tmask = _shifted(batch["tokens"], batch["mask"])
+        return hidden, head, False, targets, tmask
+    if cfg.family == "vlm":
+        hidden, head = V.forward(
+            params, batch["tokens"], batch["image_embeds"],
+            batch["mrope_positions"], cfg, return_hidden=True,
+        )
+        n_img = batch["image_embeds"].shape[1]
+        targets, tmask = _shifted(batch["tokens"], batch["mask"])
+        pad_t = jnp.zeros((targets.shape[0], n_img), targets.dtype)
+        pad_m = jnp.zeros((targets.shape[0], n_img), tmask.dtype)
+        return (hidden, head, False,
+                jnp.concatenate([pad_t, targets], 1),
+                jnp.concatenate([pad_m, tmask], 1))
+    if cfg.family == "audio":
+        hidden, head = E.forward(
+            params, batch["tokens"], batch["frames"], cfg, return_hidden=True
+        )
+        targets, tmask = _shifted(batch["tokens"], batch["mask"])
+        return hidden, head, True, targets, tmask
+    if cfg.family == "ssm":
+        hidden, head = S.forward(params, batch["tokens"], cfg, return_hidden=True)
+        targets, tmask = _shifted(batch["tokens"], batch["mask"])
+        return hidden, head, False, targets, tmask
+    if cfg.family == "hybrid":
+        hidden, head = H.forward(params, batch["tokens"], cfg, return_hidden=True)
+        targets, tmask = _shifted(batch["tokens"], batch["mask"])
+        return hidden, head, False, targets, tmask
+    raise ValueError(cfg.family)
+
+
+def prefill_fn(params, batch, cfg: ModelConfig, max_len: Optional[int] = None):
+    if cfg.family in ("dense", "moe"):
+        return T.prefill(params, batch["tokens"], cfg, max_len=max_len)
+    if cfg.family == "vlm":
+        return V.prefill(
+            params, batch["tokens"], batch["image_embeds"],
+            batch["mrope_positions"], cfg, max_len=max_len,
+        )
+    if cfg.family == "audio":
+        return E.prefill(params, batch["tokens"], batch["frames"], cfg, max_len=max_len)
+    if cfg.family == "ssm":
+        return S.prefill(params, batch["tokens"], cfg)
+    if cfg.family == "hybrid":
+        return H.prefill(params, batch["tokens"], cfg, max_len=max_len)
+    raise ValueError(cfg.family)
+
+
+def decode_fn(params, cache, tokens, cfg: ModelConfig):
+    mod = {"dense": T, "moe": T, "vlm": T, "audio": E, "ssm": S, "hybrid": H}[cfg.family]
+    return mod.decode_step(params, cache, tokens, cfg)
+
+
+def init_cache_fn(cfg: ModelConfig, batch: int, max_len: int):
+    mod = {"dense": T, "moe": T, "vlm": T, "audio": E, "ssm": S, "hybrid": H}[cfg.family]
+    return mod.init_cache(cfg, batch, max_len)
+
+
+# ------------------------------------------------------------ input specs --
+def _fsdp(mesh_names):
+    axes = tuple(a for a in ("pod", "data") if a in mesh_names)
+    return axes if axes else (mesh_names[0],)
+
+
+def _maybe(dim: int, axes, mesh: Mesh) -> Optional[Any]:
+    if axes is None:
+        return None
+    sizes = dict(mesh.shape)
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= sizes[a]
+    return axes if dim % total == 0 else None
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """(ShapeDtypeStructs, NamedShardings) for the *train/prefill* batch."""
+    names = mesh.axis_names
+    fsdp = _fsdp(names)
+    b, s = shape.global_batch, shape.seq_len
+    dt = _dt(cfg)
+    bspec = _maybe(b, fsdp, mesh)
+
+    def sds(shp, dtype, spec):
+        return (
+            jax.ShapeDtypeStruct(shp, dtype),
+            NamedSharding(mesh, P(*spec)),
+        )
+
+    batch, shards = {}, {}
+    if cfg.family == "vlm":
+        n_img = min(VLM_IMAGE_TOKENS, s // 2)
+        batch["tokens"], shards["tokens"] = sds((b, s - n_img), jnp.int32, (bspec, None))
+        batch["image_embeds"], shards["image_embeds"] = sds(
+            (b, n_img, cfg.d_model), dt, (bspec, None, None)
+        )
+        batch["mrope_positions"], shards["mrope_positions"] = sds(
+            (3, b, s), jnp.int32, (None, bspec, None)
+        )
+        batch["mask"], shards["mask"] = sds((b, s - n_img), jnp.bool_, (bspec, None))
+    elif cfg.family == "audio":
+        batch["tokens"], shards["tokens"] = sds((b, s), jnp.int32, (bspec, None))
+        batch["frames"], shards["frames"] = sds(
+            (b, cfg.encoder_frames, cfg.d_model), dt, (bspec, None, None)
+        )
+        batch["mask"], shards["mask"] = sds((b, s), jnp.bool_, (bspec, None))
+    else:
+        batch["tokens"], shards["tokens"] = sds((b, s), jnp.int32, (bspec, None))
+        batch["mask"], shards["mask"] = sds((b, s), jnp.bool_, (bspec, None))
+    return batch, shards
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """(cache ShapeDtypeStructs, shardings) for decode cells — a KV/state
+    cache already filled to shape.seq_len."""
+    names = mesh.axis_names
+    fsdp = _fsdp(names)
+    tp = "model" if "model" in names else None
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: init_cache_fn(cfg, b, s))
+
+    def spec_for(path_key: str, leaf) -> P:
+        shp = leaf.shape
+        if path_key in ("pos",):
+            return P()
+        if leaf.ndim == 0:
+            return P()
+        if path_key in ("k", "v", "cross_k", "cross_v"):
+            # [L(or apps), B, W, H, hd]
+            _, bb, w, h, _ = shp
+            bspec = _maybe(bb, fsdp, mesh)
+            hspec = _maybe(h, tp, mesh) if tp else None
+            wspec = None
+            if hspec is None and tp:
+                wspec = _maybe(w, tp, mesh)
+            if bspec is None:       # B=1 long-context: spread seq over fsdp
+                wspec2 = _maybe(w, fsdp, mesh)
+                if wspec2 is not None and wspec is None:
+                    wspec = wspec2
+                elif wspec2 is not None and wspec is not None:
+                    pass
+            return P(None, bspec, wspec, hspec, None)
+        if path_key == "conv":
+            # [..., B, W-1, C]
+            bspec = _maybe(shp[-3], fsdp, mesh)
+            cspec = _maybe(shp[-1], tp, mesh) if tp else None
+            lead = (None,) * (leaf.ndim - 3)
+            return P(*lead, bspec, None, cspec)
+        if path_key == "ssm":
+            # [..., B, H, P, N]
+            bspec = _maybe(shp[-4], fsdp, mesh)
+            hspec = _maybe(shp[-3], tp, mesh) if tp else None
+            lead = (None,) * (leaf.ndim - 4)
+            return P(*lead, bspec, hspec, None, None)
+        return P()
+
+    shards = {
+        k: NamedSharding(mesh, spec_for(k, v)) for k, v in cache.items()
+    }
+    return cache, shards
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    fsdp = _fsdp(mesh.axis_names)
+    b = shape.global_batch
+    bspec = _maybe(b, fsdp, mesh)
+    return (
+        jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        NamedSharding(mesh, P(bspec, None)),
+    )

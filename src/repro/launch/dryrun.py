@@ -1,0 +1,256 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below may now import jax.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, with zero real allocation (ShapeDtypeStruct
+inputs, abstract params):
+
+  * proof the sharding config is coherent (compile succeeds),
+  * memory_analysis()  -> bytes/device (checked against v5e HBM),
+  * cost_analysis()    -> FLOPs / bytes for the roofline terms,
+  * the partitioned HLO's collective mix -> collective bytes.
+
+Results are persisted incrementally to experiments/dryrun/*.json so reruns
+only compile missing cells.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-130m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --multi-pod-only
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, TrainConfig, get_config, get_shape, runnable_cells
+from repro.launch import adapters
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.optim import adamw
+from repro.parallel.sharding import param_shardings
+from repro.roofline import analysis as roofline
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _opt_moment_dtype(cfg):
+    return jnp.bfloat16 if cfg.opt_state_dtype == "bfloat16" else jnp.float32
+
+
+def count_params(tree) -> int:
+    import math
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+def active_params(cfg, total: int) -> int:
+    """MoE: only top-k of E experts touch each token."""
+    if cfg.num_experts > 0:
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.num_experts * cfg.num_layers
+        dense = total - expert
+        return dense + expert * cfg.num_experts_per_tok // cfg.num_experts
+    return total
+
+
+def _axis_size(mesh, axes):
+    sizes = dict(mesh.shape)
+    total = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        total *= sizes[a]
+    return total
+
+
+def pick_microbatches(cfg, shape, n_fsdp: int) -> int:
+    """Gradient-accumulation factor so per-microbatch activations fit HBM:
+    target ~64Mi bf16 activation elements per device per microbatch
+    (tokens x d_model), clamped so every microbatch still spans the fsdp
+    axis. The standard batch/memory lever at scale."""
+    if shape.kind != "train":
+        return 1
+    budget_elems = 64 * 2**20
+    if cfg.family == "audio":
+        # enc-dec: decoder cross-attention score buffers add a ~4x factor
+        budget_elems //= 4
+    tokens_per_dev = shape.global_batch * shape.seq_len / n_fsdp
+    mb = 1
+    while (
+        tokens_per_dev / mb * cfg.d_model > budget_elems
+        and shape.global_batch // (mb * 2) >= n_fsdp
+        and (shape.global_batch % (mb * 2)) == 0
+    ):
+        mb *= 2
+    return mb
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = len(mesh.devices.reshape(-1))
+    n_fsdp = n_chips // 16  # model axis is always 16
+    tcfg = TrainConfig(microbatches=pick_microbatches(cfg, shape, n_fsdp))
+
+    abstract_params = jax.eval_shape(
+        lambda: adapters.init_fn(jax.random.PRNGKey(0), cfg)
+    )
+    p_shardings = param_shardings(abstract_params, mesh)
+    n_total = count_params(abstract_params)
+    n_active = active_params(cfg, n_total)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            abstract_opt = jax.eval_shape(
+                lambda: adamw.init_state(abstract_params, tcfg, _opt_moment_dtype(cfg))
+            )
+            o_shardings = adamw.AdamWState(
+                step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+                mu=param_shardings(abstract_opt.mu, mesh),
+                nu=param_shardings(abstract_opt.nu, mesh),
+            )
+            batch, b_shardings = adapters.batch_specs(cfg, shape, mesh)
+            step_fn = make_train_step(cfg, tcfg)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shardings, o_shardings, b_shardings),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(abstract_params, abstract_opt, batch)
+        elif shape.kind == "prefill":
+            batch, b_shardings = adapters.batch_specs(cfg, shape, mesh)
+            step_fn = make_prefill_step(cfg)
+            # pin OUTPUT shardings: prefill CREATES the KV cache; without
+            # out_shardings XLA may replicate it (observed: whisper prefill
+            # ballooning to 161 GiB/device).
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            _, c_shardings = adapters.cache_specs(cfg, shape, mesh)
+            fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+            bspec = fsdp if shape.global_batch % _axis_size(mesh, fsdp) == 0 else None
+            vspec = "model" if cfg.vocab_size % _axis_size(mesh, "model") == 0 else None
+            logit_sharding = NamedSharding(mesh, P(bspec, None, vspec))
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shardings, b_shardings),
+                out_shardings=(logit_sharding, c_shardings),
+            )
+            lowered = jitted.lower(abstract_params, batch)
+        else:  # decode
+            cache, c_shardings = adapters.cache_specs(cfg, shape, mesh)
+            tokens, t_sharding = adapters.decode_token_specs(cfg, shape, mesh)
+            step_fn = make_serve_step(cfg)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shardings, c_shardings, t_sharding),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(abstract_params, cache, tokens)
+
+        compiled = lowered.compile()
+
+    terms = roofline.analyze(compiled)
+    mf = roofline.model_flops(cfg, shape, n_active, n_total)
+    mf_per_device = mf / n_chips
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "microbatches": tcfg.microbatches,
+        "params_total": n_total,
+        "params_active": n_active,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf_per_device,
+        "useful_flops_ratio": (mf_per_device / terms.flops) if terms.flops else None,
+        "fits_hbm": (terms.bytes_per_device - terms.cpu_convert_artifact)
+        <= roofline.HBM_PER_CHIP,
+        "hbm_gib": terms.bytes_per_device / 2**30,
+        "hbm_gib_tpu_corrected": (terms.bytes_per_device - terms.cpu_convert_artifact) / 2**30,
+        **terms.to_dict(),
+    }
+    return record
+
+
+def cell_path(arch, shape_name, multi_pod, tag=""):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    safe = arch.replace(".", "_")
+    return os.path.join(OUT_DIR, f"{safe}__{shape_name}__{mesh}{tag}.json")
+
+
+def run_cell(arch, shape_name, multi_pod, force=False, tag="") -> Optional[Dict]:
+    path = cell_path(arch, shape_name, multi_pod, tag)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    t0 = time.time()
+    try:
+        record = lower_cell(arch, shape_name, multi_pod)
+        record["compile_s"] = time.time() - t0
+        record["ok"] = True
+    except Exception as e:  # record failures — they are bugs to fix
+        record = {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "ok": False, "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+            "compile_s": time.time() - t0,
+        }
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = runnable_cells()
+    meshes = [False, True]
+    if args.single_pod_only:
+        meshes = [False]
+    if args.multi_pod_only:
+        meshes = [True]
+
+    n_ok = n_fail = 0
+    for arch, shapes in cells.items():
+        if args.arch and arch != args.arch:
+            continue
+        for shape_name in shapes:
+            if args.shape and shape_name != args.shape:
+                continue
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, mp, force=args.force)
+                status = "OK " if rec.get("ok") else "FAIL"
+                if rec.get("ok"):
+                    n_ok += 1
+                    print(
+                        f"{status} {arch:22s} {shape_name:12s} {rec['mesh']:8s} "
+                        f"hbm={rec['hbm_gib']:.2f}GiB fits={rec['fits_hbm']} "
+                        f"dom={rec['dominant']:10s} "
+                        f"t_c={rec['compute_s']*1e3:.2f}ms t_m={rec['memory_s']*1e3:.2f}ms "
+                        f"t_x={rec['collective_s']*1e3:.2f}ms "
+                        f"useful={rec['useful_flops_ratio'] and round(rec['useful_flops_ratio'],3)} "
+                        f"[{rec['compile_s']:.0f}s]",
+                        flush=True,
+                    )
+                else:
+                    n_fail += 1
+                    print(f"{status} {arch:22s} {shape_name:12s} {rec['mesh']:8s} "
+                          f"{rec['error'][:160]}", flush=True)
+    print(f"\ndry-run complete: {n_ok} ok, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,100 @@
+"""Batched serving driver: prefill + decode with continuous slot refill.
+
+A minimal production serving loop: a request queue feeds fixed decode slots;
+finished sequences (EOS or budget) free their slot, which is refilled by
+prefilling the next request — the static-shape analogue of continuous
+batching (slot refill re-runs prefill for the joining request only).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --smoke \
+      --requests 12 --slots 4 --prompt-len 32 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch import adapters
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_serve_step
+
+EOS = 2
+
+
+def serve(arch: str, smoke: bool, num_requests: int, slots: int,
+          prompt_len: int, max_new: int, seed: int = 0):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    assert cfg.family in ("dense", "moe", "ssm", "hybrid"), (
+        "serving demo drives the decoder-only families"
+    )
+    rng = np.random.default_rng(seed)
+    requests: List[np.ndarray] = [
+        rng.integers(3, cfg.vocab_size, size=prompt_len).astype(np.int32)
+        for _ in range(num_requests)
+    ]
+    max_len = prompt_len + max_new
+
+    mesh = make_host_mesh()
+    with jax.set_mesh(mesh):
+        params = adapters.init_fn(jax.random.PRNGKey(seed), cfg)
+        serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+        def prefill_one(prompt: np.ndarray):
+            batch = {"tokens": jnp.asarray(prompt)[None]}
+            logits, cache = adapters.prefill_fn(params, batch, cfg, max_len=max_len)
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            return nxt, cache
+
+        # slot state: per-slot caches batched by stacking later; for clarity
+        # (and CPU scale) each slot holds its own cache pytree.
+        queue = list(range(num_requests))
+        active = {}
+        outputs = {i: [] for i in range(num_requests)}
+        t0 = time.time()
+        decoded = 0
+
+        def refill(slot):
+            if not queue:
+                return None
+            rid = queue.pop(0)
+            nxt, cache = prefill_one(requests[rid])
+            return {"rid": rid, "tokens": nxt, "cache": cache, "n": 0}
+
+        slot_state = {s: refill(s) for s in range(slots)}
+        while any(v is not None for v in slot_state.values()):
+            for s, st in list(slot_state.items()):
+                if st is None:
+                    continue
+                tok, cache = serve_step(params, st["cache"], st["tokens"])
+                outputs[st["rid"]].append(int(tok[0, 0]))
+                decoded += 1
+                st["tokens"], st["cache"], st["n"] = tok, cache, st["n"] + 1
+                if int(tok[0, 0]) == EOS or st["n"] >= max_new:
+                    slot_state[s] = refill(s)
+        dt = time.time() - t0
+        print(f"[serve] {num_requests} requests, {decoded} tokens decoded in "
+              f"{dt:.1f}s ({decoded/dt:.1f} tok/s, {slots} slots)")
+    return outputs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+    serve(args.arch, args.smoke, args.requests, args.slots,
+          args.prompt_len, args.max_new)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""End-to-end training driver with fault tolerance.
+
+Production behaviors demonstrated at laptop scale (and identical in shape to
+the multi-pod deployment — the mesh/config swap is the only difference):
+
+  * deterministic sharded data: batch(step, host) is a pure function, so a
+    restart replays nothing and an elastic re-shard changes only host_id
+    mapping;
+  * checkpoint/restart: versioned, digest-checked, async; auto-resume from
+    the latest step (kill -9 at any point and re-run the same command);
+  * straggler/failure handling at the job level: the launcher re-executes
+    the same command; in-step determinism makes the retry idempotent.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import TrainConfig, get_config, get_smoke_config
+from repro.data import DataConfig, batch_for_step
+from repro.launch import adapters
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.optim import adamw
+from repro.parallel.sharding import param_shardings
+
+
+def build_batch(cfg, dcfg, step: int):
+    tokens, mask = batch_for_step(step, dcfg)
+    batch = {"tokens": jnp.asarray(tokens), "mask": jnp.asarray(mask)}
+    if cfg.family == "vlm":
+        b, s = tokens.shape
+        n_img = max(4, s // 8)
+        gh = int(np.sqrt(n_img))
+        n_img = gh * gh
+        from repro.models.vlm import make_mrope_positions
+
+        rng = np.random.default_rng(step)
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(b, n_img, cfg.d_model)).astype(np.float32)
+        )
+        batch["mrope_positions"] = make_mrope_positions(b, s + n_img, n_img, (gh, gh))
+    if cfg.family == "audio":
+        rng = np.random.default_rng(step)
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(tokens.shape[0], cfg.encoder_frames, cfg.d_model))
+            .astype(np.float32)
+        )
+    return batch
+
+
+def train(arch: str, smoke: bool, steps: int, batch_size: int, seq_len: int,
+          ckpt_dir: str | None, checkpoint_every: int = 50,
+          microbatches: int = 1, log_every: int = 10):
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    tcfg = TrainConfig(total_steps=steps, warmup_steps=max(1, steps // 10),
+                       microbatches=microbatches,
+                       checkpoint_every=checkpoint_every)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                      batch_per_host=batch_size)
+
+    mesh = make_host_mesh()
+    params = adapters.init_fn(jax.random.PRNGKey(tcfg.seed), cfg)
+    opt_state = adamw.init_state(params, tcfg)
+    start_step = 0
+
+    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    if ckpt and ckpt.latest_step() is not None:
+        params, opt_state, meta = ckpt.restore(None, params, opt_state)
+        start_step = meta["step"]
+        print(f"[train] resumed from step {start_step}")
+
+    with jax.set_mesh(mesh):
+        p_shardings = param_shardings(params, mesh)
+        params = jax.device_put(params, p_shardings)
+        step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+
+        losses = []
+        t0 = time.time()
+        for step in range(start_step, steps):
+            batch = build_batch(cfg, dcfg, step)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if (step + 1) % log_every == 0:
+                dt = time.time() - t0
+                tps = log_every * batch_size * seq_len / dt
+                print(
+                    f"[train] step {step+1:5d} loss {losses[-1]:.4f} "
+                    f"lr {float(metrics['lr']):.2e} gnorm {float(metrics['grad_norm']):.2f} "
+                    f"{tps:,.0f} tok/s",
+                    flush=True,
+                )
+                t0 = time.time()
+            if ckpt and (step + 1) % tcfg.checkpoint_every == 0:
+                ckpt.save(step + 1, jax.device_get(params),
+                          jax.device_get(opt_state))
+        if ckpt:
+            ckpt.save(steps, jax.device_get(params), jax.device_get(opt_state),
+                      block=True)
+            ckpt.wait()
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    losses = train(args.arch, args.smoke, args.steps, args.batch, args.seq,
+                   args.ckpt_dir, microbatches=args.microbatches)
+    print(f"[train] final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Model zoo: one module per family; configs/registry.py binds arch ids to
+(family module, ModelConfig). Every family exposes init_params / forward and,
+where decoding exists, init_cache / prefill / decode_step.
+"""
+from repro.models import transformer, moe, ssm, hybrid, encdec, vlm, layers
+
+FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,   # MoE runs through transformer.py with expert MLPs
+    "vlm": vlm,
+    "audio": encdec,
+    "ssm": ssm,
+    "hybrid": hybrid,
+}
+
+__all__ = ["transformer", "moe", "ssm", "hybrid", "encdec", "vlm", "layers", "FAMILY_MODULES"]

@@ -1,0 +1,234 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` supplies
+precomputed mel-frame embeddings [B, T_enc, D] (what the two stride-2 convs
+would produce). Encoder: bidirectional MHA + GELU MLP, sinusoidal positions.
+Decoder: causal self-attention + cross-attention + GELU MLP, learned
+positions, tied embedding head.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+MAX_DECODER_POS = 65536
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def sinusoids(length: int, channels: int) -> np.ndarray:
+    log_timescale = np.log(10000.0) / (channels // 2 - 1)
+    inv = np.exp(-log_timescale * np.arange(channels // 2))
+    ang = np.arange(length)[:, None] * inv[None, :]
+    return np.concatenate([np.sin(ang), np.cos(ang)], axis=1).astype(np.float32)
+
+
+def _init_attn(keys, d, hq, hkv, hd, dt, prefix=""):
+    return {
+        prefix + "wq": L.dense_init(keys[0], (d, hq * hd), d, dt),
+        prefix + "wk": L.dense_init(keys[1], (d, hkv * hd), d, dt),
+        prefix + "wv": L.dense_init(keys[2], (d, hkv * hd), d, dt),
+        prefix + "wo": L.dense_init(keys[3], (hq * hd, d), hq * hd, dt),
+    }
+
+
+def _ln_init(lead, d, dt):
+    return {"scale": jnp.ones(lead + (d,), dt), "bias": jnp.zeros(lead + (d,), dt)}
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = _dt(cfg)
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    le, ld = cfg.encoder_layers, cfg.num_layers
+    ks = jax.random.split(key, 24)
+
+    enc_blocks = {
+        "attn": {
+            "wq": L.dense_init(ks[0], (le, d, h * hd), d, dt),
+            "wk": L.dense_init(ks[1], (le, d, h * hd), d, dt),
+            "wv": L.dense_init(ks[2], (le, d, h * hd), d, dt),
+            "wo": L.dense_init(ks[3], (le, h * hd, d), h * hd, dt),
+        },
+        "mlp": {
+            "w_gate": L.dense_init(ks[4], (le, d, cfg.d_ff), d, dt),
+            "w_down": L.dense_init(ks[5], (le, cfg.d_ff, d), cfg.d_ff, dt),
+        },
+        "ln1": _ln_init((le,), d, dt),
+        "ln2": _ln_init((le,), d, dt),
+    }
+    dec_blocks = {
+        "self_attn": {
+            "wq": L.dense_init(ks[6], (ld, d, h * hd), d, dt),
+            "wk": L.dense_init(ks[7], (ld, d, h * hd), d, dt),
+            "wv": L.dense_init(ks[8], (ld, d, h * hd), d, dt),
+            "wo": L.dense_init(ks[9], (ld, h * hd, d), h * hd, dt),
+        },
+        "cross_attn": {
+            "cross_wq": L.dense_init(ks[10], (ld, d, h * hd), d, dt),
+            "cross_wk": L.dense_init(ks[11], (ld, d, h * hd), d, dt),
+            "cross_wv": L.dense_init(ks[12], (ld, d, h * hd), d, dt),
+            "cross_wo": L.dense_init(ks[13], (ld, h * hd, d), h * hd, dt),
+        },
+        "mlp": {
+            "w_gate": L.dense_init(ks[14], (ld, d, cfg.d_ff), d, dt),
+            "w_down": L.dense_init(ks[15], (ld, cfg.d_ff, d), cfg.d_ff, dt),
+        },
+        "ln1": _ln_init((ld,), d, dt),
+        "ln2": _ln_init((ld,), d, dt),
+        "ln3": _ln_init((ld,), d, dt),
+    }
+    return {
+        "embed": L.dense_init(ks[16], (cfg.vocab_size, d), d, dt),
+        "pos_embed": L.dense_init(ks[17], (MAX_DECODER_POS, d), d, dt),
+        "enc_blocks": enc_blocks,
+        "enc_ln": _ln_init((), d, dt),
+        "dec_blocks": dec_blocks,
+        "dec_ln": _ln_init((), d, dt),
+    }
+
+
+def _mha(x, ctx, p, cfg, causal, prefix=""):
+    b, s, d = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,dh->bsh", ctx, p[prefix + "wk"].astype(x.dtype)).reshape(b, -1, h, hd)
+    v = jnp.einsum("bsd,dh->bsh", ctx, p[prefix + "wv"].astype(x.dtype)).reshape(b, -1, h, hd)
+    o = L.gqa_attention_chunked(q, k, v, causal=causal)
+    return jnp.einsum("bsh,hd->bsd", o.reshape(b, s, h * hd), p[prefix + "wo"].astype(x.dtype))
+
+
+def _plain_attn(q, k, v):
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    pr = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", pr, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames [B, T, D] (stubbed conv-frontend output) -> [B, T, D]."""
+    dt = _dt(cfg)
+    b, t, d = frames.shape
+    x = L.batch_shard(frames.astype(dt) + jnp.asarray(sinusoids(t, d)).astype(dt)[None])
+
+    def block(x, bp):
+        h = L.layer_norm(x, bp["ln1"]["scale"], bp["ln1"]["bias"], cfg.norm_eps)
+        x = x + _mha(h, h, bp["attn"], cfg, causal=False)
+        h = L.layer_norm(x, bp["ln2"]["scale"], bp["ln2"]["bias"], cfg.norm_eps)
+        x = x + L.gated_mlp(h, bp["mlp"]["w_gate"], None, bp["mlp"]["w_down"], act="gelu")
+        return x, None
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(blk, x, params["enc_blocks"])
+    return L.layer_norm(x, params["enc_ln"]["scale"], params["enc_ln"]["bias"], cfg.norm_eps)
+
+
+def forward(params, tokens: jax.Array, frames: jax.Array, cfg: ModelConfig,
+            return_hidden: bool = False) -> jax.Array:
+    """Teacher-forced train forward -> logits [B, S, V] (or (hidden, embed)
+    when return_hidden; the head is the transposed tied embedding)."""
+    enc_out = encode(params, frames, cfg)
+    dt = _dt(cfg)
+    b, s = tokens.shape
+    x = L.batch_shard(
+        params["embed"].astype(dt)[tokens] + params["pos_embed"].astype(dt)[:s][None]
+    )
+
+    def block(x, bp):
+        h = L.layer_norm(x, bp["ln1"]["scale"], bp["ln1"]["bias"], cfg.norm_eps)
+        x = x + _mha(h, h, bp["self_attn"], cfg, causal=True)
+        h = L.layer_norm(x, bp["ln2"]["scale"], bp["ln2"]["bias"], cfg.norm_eps)
+        x = x + _mha(h, enc_out, bp["cross_attn"], cfg, causal=False, prefix="cross_")
+        h = L.layer_norm(x, bp["ln3"]["scale"], bp["ln3"]["bias"], cfg.norm_eps)
+        x = x + L.gated_mlp(h, bp["mlp"]["w_gate"], None, bp["mlp"]["w_down"], act="gelu")
+        return x, None
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(blk, x, params["dec_blocks"])
+    x = L.layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"], cfg.norm_eps)
+    if return_hidden:
+        return x, params["embed"]
+    return L.lm_head(x, params["embed"], transpose=True)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    h, hd, ld = cfg.num_heads, cfg.resolved_head_dim, cfg.num_layers
+    dt_ = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    t = cfg.encoder_frames
+    return {
+        "k": jnp.zeros((ld, batch, max_len, h, hd), dt_),
+        "v": jnp.zeros((ld, batch, max_len, h, hd), dt_),
+        "cross_k": jnp.zeros((ld, batch, t, h, hd), dt_),
+        "cross_v": jnp.zeros((ld, batch, t, h, hd), dt_),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+        "cur": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, frames, cfg: ModelConfig, max_len: Optional[int] = None):
+    """Encode audio, precompute cross-attention KV, teacher-force the prompt."""
+    enc_out = encode(params, frames, cfg)
+    b, s = tokens.shape
+    max_len = max_len or s
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+
+    def cross_kv(bp):
+        k = jnp.einsum("btd,dh->bth", enc_out, bp["cross_attn"]["cross_wk"].astype(enc_out.dtype))
+        v = jnp.einsum("btd,dh->bth", enc_out, bp["cross_attn"]["cross_wv"].astype(enc_out.dtype))
+        t = enc_out.shape[1]
+        return k.reshape(b, t, h, hd), v.reshape(b, t, h, hd)
+
+    ck, cv = jax.vmap(cross_kv, in_axes=(0,))(params["dec_blocks"])
+    logits = forward(params, tokens, frames, cfg)
+    cache = init_cache(cfg, b, max_len)
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    cache["cur"] = jnp.asarray(s, jnp.int32)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    dt_ = _dt(cfg)
+    b = tokens.shape[0]
+    cur = cache["cur"]
+    x = params["embed"].astype(dt_)[tokens] + jnp.take(
+        params["pos_embed"].astype(dt_), jnp.broadcast_to(cur, (1,)), axis=0
+    )[None]
+    h_, hd = cfg.num_heads, cfg.resolved_head_dim
+    w = cache["k"].shape[2]
+    cache_pos = cache["pos"].at[cur % w].set(cur)
+
+    def block(x, bp_kv):
+        bp, kc, vc, ck, cv = bp_kv
+        h = L.layer_norm(x, bp["ln1"]["scale"], bp["ln1"]["bias"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", h, bp["self_attn"]["wq"].astype(x.dtype)).reshape(b, 1, h_, hd)
+        k = jnp.einsum("bsd,dh->bsh", h, bp["self_attn"]["wk"].astype(x.dtype)).reshape(b, 1, h_, hd)
+        v = jnp.einsum("bsd,dh->bsh", h, bp["self_attn"]["wv"].astype(x.dtype)).reshape(b, 1, h_, hd)
+        slot = cur % w
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        o = L.gqa_attention_decode(q, kc, vc, cache_pos, cur)
+        x = x + jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, h_ * hd), bp["self_attn"]["wo"].astype(x.dtype))
+        # cross attention against precomputed encoder KV
+        h2 = L.layer_norm(x, bp["ln2"]["scale"], bp["ln2"]["bias"], cfg.norm_eps)
+        q2 = jnp.einsum("bsd,dh->bsh", h2, bp["cross_attn"]["cross_wq"].astype(x.dtype)).reshape(b, 1, h_, hd)
+        o2 = _plain_attn(q2, ck, cv)
+        x = x + jnp.einsum("bsh,hd->bsd", o2.reshape(b, 1, h_ * hd), bp["cross_attn"]["cross_wo"].astype(x.dtype))
+        h3 = L.layer_norm(x, bp["ln3"]["scale"], bp["ln3"]["bias"], cfg.norm_eps)
+        x = x + L.gated_mlp(h3, bp["mlp"]["w_gate"], None, bp["mlp"]["w_down"], act="gelu")
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        block, x,
+        (params["dec_blocks"], cache["k"], cache["v"], cache["cross_k"], cache["cross_v"]),
+    )
+    x = L.layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"], cfg.norm_eps)
+    logits = L.lm_head(x, params["embed"], transpose=True)
+    new_cache = dict(cache, k=ks, v=vs, pos=cache_pos, cur=cur + 1)
+    return logits, new_cache

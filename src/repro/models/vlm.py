@@ -1,0 +1,67 @@
+"""Qwen2-VL backbone (arXiv:2409.12191): the assigned entry is the
+transformer BACKBONE; the vision tower is a STUB — ``input_specs()`` supplies
+precomputed patch embeddings [B, S_img, D] which are prefixed to the text
+tokens, plus M-RoPE position ids [3, B, S] (temporal / height / width
+streams, dynamic-resolution ready).
+
+Everything else delegates to models/transformer.py with
+cfg.mrope_sections set.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+init_params = T.init_params
+init_cache = T.init_cache
+
+
+def make_mrope_positions(
+    batch: int, seq: int, num_image_tokens: int, grid_hw: Tuple[int, int]
+) -> jnp.ndarray:
+    """Build [3, B, S] (t, h, w) positions: image patches get (0, y, x); text
+    tokens continue with equal t/h/w ids after the image (Qwen2-VL scheme)."""
+    gh, gw = grid_hw
+    assert gh * gw == num_image_tokens
+    ys = jnp.repeat(jnp.arange(gh), gw)
+    xs = jnp.tile(jnp.arange(gw), gh)
+    t_img = jnp.zeros((num_image_tokens,), jnp.int32)
+    n_text = seq - num_image_tokens
+    start = max(gh, gw)
+    text = start + jnp.arange(n_text, dtype=jnp.int32)
+    pos_t = jnp.concatenate([t_img, text])
+    pos_h = jnp.concatenate([ys.astype(jnp.int32), text])
+    pos_w = jnp.concatenate([xs.astype(jnp.int32), text])
+    pos = jnp.stack([pos_t, pos_h, pos_w])          # [3, S]
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+def forward(
+    params: Dict[str, Any],
+    tokens: jax.Array,            # [B, S_text]
+    image_embeds: jax.Array,      # [B, S_img, D]
+    mrope_positions: jax.Array,   # [3, B, S_img + S_text]
+    cfg: ModelConfig,
+    return_hidden: bool = False,
+) -> jax.Array:
+    return T.forward(
+        params, tokens, cfg,
+        mrope_positions=mrope_positions,
+        extra_embeds=image_embeds,
+        return_hidden=return_hidden,
+    )
+
+
+def prefill(params, tokens, image_embeds, mrope_positions, cfg, max_len=None):
+    return T.prefill(
+        params, tokens, cfg, max_len=max_len,
+        mrope_positions=mrope_positions, extra_embeds=image_embeds,
+    )
+
+
+decode_step = T.decode_step

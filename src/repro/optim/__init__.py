@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWState, init_state, apply_updates, cosine_lr, clip_by_global_norm
+
+__all__ = ["AdamWState", "init_state", "apply_updates", "cosine_lr", "clip_by_global_norm"]

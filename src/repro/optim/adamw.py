@@ -1,0 +1,85 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule,
+and configurable moment dtype (bf16 moments for >=100B models — halves
+optimizer HBM, the enabling trick for llama3-405b on a 256-chip pod).
+
+Functional optax-style triple (init / update) without the optax dependency —
+everything jit-safe and shard-transparent (moments inherit parameter
+shardings through the rules in parallel/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any      # first moments  (pytree like params)
+    nu: Any      # second moments
+
+
+def init_state(params: Any, cfg: TrainConfig, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def cosine_lr(step: jax.Array, cfg: TrainConfig) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    progress = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads)
+    )
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def apply_updates(
+    params: Any, grads: Any, state: AdamWState, cfg: TrainConfig
+) -> Tuple[Any, AdamWState, jax.Array, jax.Array]:
+    """Returns (new_params, new_state, lr, grad_norm)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_lr(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, n):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        nf = n.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        mhat = mf / c1
+        nhat = nf / c2
+        delta = mhat / (jnp.sqrt(nhat) + 1e-8)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr * (delta + wd * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), mf.astype(m.dtype), nf.astype(n.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_n = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_n = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_n), lr, gnorm

@@ -1,0 +1,15 @@
+from repro.parallel.sharding import (
+    AxisRules,
+    rules_for_mesh,
+    param_shardings,
+    constrain,
+)
+from repro.parallel.collectives import compressed_psum
+
+__all__ = [
+    "AxisRules",
+    "rules_for_mesh",
+    "param_shardings",
+    "constrain",
+    "compressed_psum",
+]

@@ -1,0 +1,42 @@
+"""Distributed-optimization collectives helpers.
+
+``compressed_psum`` — bf16 gradient compression for the cross-device
+all-reduce: halves the collective bytes of the gradient reduction (the
+dominant collective of data-parallel training) at the cost of ~8 mantissa
+bits, which AdamW's normalizer absorbs. Selected by
+TrainConfig.grad_compression="bf16"; EXPERIMENTS.md §Perf quantifies the
+collective-term saving on the hillclimbed cells.
+
+Under jit-with-sharding (our default), gradients are reduced implicitly by
+XLA; compression is expressed by casting the gradient pytree to bf16 *before*
+the psum boundary (microbatch accumulation loop) and restoring f32 after.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_tree(grads: Any, mode: str) -> Any:
+    if mode == "bf16":
+        return jax.tree.map(
+            lambda g: g.astype(jnp.bfloat16) if g.dtype == jnp.float32 else g, grads
+        )
+    return grads
+
+
+def decompress_tree(grads: Any, mode: str) -> Any:
+    if mode == "bf16":
+        return jax.tree.map(
+            lambda g: g.astype(jnp.float32) if g.dtype == jnp.bfloat16 else g, grads
+        )
+    return grads
+
+
+def compressed_psum(grads: Any, axis_name: str, mode: str = "bf16") -> Any:
+    """Explicit-collective variant for shard_map code paths."""
+    grads = compress_tree(grads, mode)
+    grads = jax.tree.map(lambda g: jax.lax.psum(g, axis_name), grads)
+    return decompress_tree(grads, mode)

@@ -1,0 +1,164 @@
+"""Parameter & activation sharding rules (FSDP + TP, pod-aware).
+
+Meshes are always ("data", "model") single-pod or ("pod", "data", "model")
+multi-pod. Policy:
+
+* ``fsdp`` axes = ("pod", "data") when present, else ("data",): parameters,
+  optimizer moments and gradients are fully sharded over them (ZeRO-3 style)
+  *in addition to* tensor parallelism over "model" — required to fit >=100B
+  models (DESIGN.md §7).
+* ``tp`` axis = "model": attention head projections and FFN hidden dim.
+
+Rules are name-based over the param pytree path, so every architecture in the
+zoo (dense / MoE / SSM / hybrid / enc-dec) gets a spec without per-model
+plumbing. A dim is sharded only when divisible by the axis size — otherwise
+the rule degrades to replication for that dim (logged by the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    fsdp: Tuple[str, ...]        # ("pod","data") or ("data",)
+    tp: str                      # "model"
+    mesh: Mesh
+
+    def axis_size(self, axes) -> int:
+        if isinstance(axes, str):
+            axes = (axes,)
+        sizes = dict(self.mesh.shape)
+        size = 1
+        for a in axes:
+            size *= sizes[a]
+        return size
+
+
+def rules_for_mesh(mesh: Mesh) -> AxisRules:
+    names = mesh.axis_names
+    fsdp = tuple(a for a in ("pod", "data") if a in names)
+    if not fsdp:
+        fsdp = (names[0],)
+    tp = "model" if "model" in names else names[-1]
+    return AxisRules(fsdp=fsdp, tp=tp, mesh=mesh)
+
+
+# (regex over param path, spec template) — templates use "F" for fsdp axes,
+# "T" for tp, None for replicated; applied right-aligned to the array rank so
+# stacked [L, ...] params get a leading None automatically.
+_RULES = [
+    (r"embed", ("T", "F")),                  # [V, D] vocab over tp
+    (r"lm_head", ("F", "T")),                # [D, V]
+    (r"(wq|wk|wv|in_proj|w_gate|w_up|dt_proj|cross_wq|enc_wq|enc_wk|enc_wv)$", ("F", "T")),
+    (r"(wo|w_down|out_proj|cross_wo|enc_wo)$", ("T", "F")),
+    (r"(bq|bk|bv|b_gate|b_up)$", ("T",)),
+    (r"(bo|b_down)$", ("F",)),
+    (r"router", ("F", None)),                # [D, E] experts replicated
+    (r"experts_(gate|up)$", (None, "F", "T")),   # [E, D, F] TP-MoE
+    (r"experts_down$", (None, "T", "F")),        # [E, F, D]
+    (r"conv_w", (None, None)),               # ssm depthwise conv [W, C]
+    (r"(A_log|D_skip|dt_bias|conv_b)", (None,)),
+    (r"(norm|scale|bias|ln)", (None,)),
+    (r"pos_embed", (None, "F")),
+]
+
+
+def _spec_for(path: str, shape: Tuple[int, ...], rules: AxisRules) -> P:
+    for pat, template in _RULES:
+        if re.search(pat, path):
+            tpl = list(template)
+            # right-align template to rank (stacked layer dims lead)
+            pad = len(shape) - len(tpl)
+            if pad < 0:
+                tpl = tpl[-len(shape):] if len(shape) else []
+            else:
+                tpl = [None] * pad + tpl
+            spec = []
+            for dim, t in zip(shape, tpl):
+                if t == "F":
+                    ax = rules.fsdp if len(rules.fsdp) > 1 else rules.fsdp[0]
+                    spec.append(ax if dim % rules.axis_size(ax) == 0 else None)
+                elif t == "T":
+                    spec.append(rules.tp if dim % rules.axis_size(rules.tp) == 0 else None)
+                else:
+                    spec.append(None)
+            return P(*spec)
+    return P()  # replicated default
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh) -> Any:
+    """Given a pytree of ShapeDtypeStruct (or arrays), produce NamedShardings."""
+    rules = rules_for_mesh(mesh)
+
+    def f(path, leaf):
+        spec = _spec_for(_path_str(path), leaf.shape, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def param_specs(params_shape: Any, mesh: Mesh) -> Any:
+    rules = rules_for_mesh(mesh)
+
+    def f(path, leaf):
+        return _spec_for(_path_str(path), leaf.shape, rules)
+
+    return jax.tree_util.tree_map_with_path(f, params_shape)
+
+
+def constrain(x: jax.Array, spec: Optional[P]) -> jax.Array:
+    """Apply a sharding constraint if we are under a mesh context; no-op on a
+    bare CPU run (so smoke tests don't need a mesh).
+
+    NB: must pass NamedSharding(abstract_mesh, spec) — the bare-PartitionSpec
+    form of with_sharding_constraint silently no-ops on Auto-typed mesh axes
+    in this jax version (verified; it cost 30+ GiB of replicated MoE buffers
+    before being caught)."""
+    if spec is None:
+        return x
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or not mesh.axis_names:
+            return x
+        # drop axes the current mesh doesn't have (uneven dims are fine:
+        # with_sharding_constraint pads)
+        def _filter(entry):
+            if entry is None:
+                return None
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            kept = tuple(a for a in axes if a in mesh.axis_names)
+            if not kept:
+                return None
+            return kept if isinstance(entry, tuple) else kept[0]
+
+        entries = list(spec) + [None] * (x.ndim - len(spec))
+        spec2 = P(*[_filter(e) for e in entries])
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, spec2)
+        )
+    except Exception:
+        return x
+
+
+def batch_spec(mesh_names: Tuple[str, ...]) -> P:
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh_names)
+    return P(fsdp if len(fsdp) > 1 else (fsdp[0] if fsdp else None))

@@ -1,0 +1,15 @@
+from repro.roofline.analysis import (
+    RooflineTerms,
+    analyze,
+    collective_bytes,
+    model_flops,
+    PEAK_FLOPS,
+    HBM_BW,
+    LINK_BW,
+    HBM_PER_CHIP,
+)
+
+__all__ = [
+    "RooflineTerms", "analyze", "collective_bytes", "model_flops",
+    "PEAK_FLOPS", "HBM_BW", "LINK_BW", "HBM_PER_CHIP",
+]

@@ -1,0 +1,69 @@
+"""Checkpointing: roundtrip, digest integrity, latest-resume, gc."""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.checkpoint import Checkpointer
+
+
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2, 2), jnp.bfloat16)},
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    t = tree()
+    ck.save(5, t, metadata={"loss": 1.5})
+    restored, _, meta = ck.restore(None, t)
+    assert meta["step"] == 5
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+
+
+def test_resume_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    t = tree()
+    for s in (10, 20, 30):
+        ck.save(s, t)
+    assert ck.latest_step() == 30
+
+
+def test_gc_keeps_last_k(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+    t = tree()
+    for s in (1, 2, 3, 4):
+        ck.save(s, t)
+    assert ck.all_steps() == [3, 4]
+
+
+def test_digest_detects_corruption(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    t = tree()
+    ck.save(1, t)
+    d = os.path.join(str(tmp_path), "step_00000001")
+    data = dict(np.load(os.path.join(d, "params.npz")))
+    data["a"] = data["a"] + 1.0
+    np.savez(os.path.join(d, "params.npz"), **data)
+    with pytest.raises(IOError):
+        ck.restore(1, t)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, tree())
+    bad = {"a": jnp.zeros((2, 2)), "nested": {"b": jnp.ones((2, 2), jnp.bfloat16)}}
+    with pytest.raises((ValueError, IOError)):
+        ck.restore(1, bad)
+
+
+def test_async_save(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    ck.save(7, tree())
+    ck.wait()
+    assert ck.latest_step() == 7

@@ -1,0 +1,167 @@
+"""Per-architecture smoke tests (reduced configs): one forward + one train
+step on CPU asserting output shapes and no NaNs — the per-arch contract from
+the assignment. Plus family-specific consistency checks (SSD train==decode,
+rolling-window SWA cache)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, TrainConfig, get_smoke_config
+from repro.launch import adapters
+from repro.launch.steps import make_train_step
+from repro.optim import adamw
+
+B, SEQ = 2, 64
+
+
+def smoke_batch(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.family == "vlm":
+        n_img, gh, gw = 16, 4, 4
+        batch["tokens"] = jnp.asarray(
+            rng.integers(1, cfg.vocab_size, (B, SEQ - n_img)), jnp.int32
+        )
+        batch["mask"] = jnp.ones((B, SEQ - n_img), bool)
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(B, n_img, cfg.d_model)), jnp.float32
+        )
+        from repro.models.vlm import make_mrope_positions
+        batch["mrope_positions"] = make_mrope_positions(B, SEQ, n_img, (gh, gw))
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(1, cfg.vocab_size, (B, SEQ)), jnp.int32
+        )
+        batch["mask"] = jnp.ones((B, SEQ), bool)
+    if cfg.family == "audio":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.encoder_frames, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    tcfg = TrainConfig(total_steps=10, warmup_steps=2)
+    params = adapters.init_fn(jax.random.PRNGKey(0), cfg)
+    batch = smoke_batch(cfg)
+
+    hidden, head, tr, targets, mask = adapters.train_hidden(params, batch, cfg)
+    assert hidden.shape[-1] == cfg.d_model
+    assert not bool(jnp.any(jnp.isnan(hidden))), f"{arch}: NaN hidden"
+
+    opt = adamw.init_state(params, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    p2, o2, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss), f"{arch}: loss={loss}"
+    assert loss > 0
+    # params actually changed
+    delta = sum(
+        float(jnp.abs(a - b).sum())
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert delta > 0, f"{arch}: optimizer produced no update"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_loss_decreases(arch):
+    cfg = get_smoke_config(arch)
+    tcfg = TrainConfig(total_steps=30, warmup_steps=2, learning_rate=5e-3)
+    params = adapters.init_fn(jax.random.PRNGKey(0), cfg)
+    opt = adamw.init_state(params, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = smoke_batch(cfg)  # same batch -> loss must drop fast
+    losses = []
+    for _ in range(8):
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], f"{arch}: {losses}"
+
+
+DECODE_ARCHS = [a for a in ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    params = adapters.init_fn(jax.random.PRNGKey(0), cfg)
+    batch = smoke_batch(cfg)
+    logits, cache = adapters.prefill_fn(params, batch, cfg, max_len=SEQ + 8)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    for _ in range(3):
+        logits, cache = adapters.decode_fn(params, cache, tok[:, :1], cfg)
+        assert logits.shape[-1] == cfg.vocab_size
+        assert not bool(jnp.any(jnp.isnan(logits))), arch
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+
+
+def test_ssd_decode_matches_train_forward():
+    """SSD duality check: token-by-token recurrent decode reproduces the
+    chunked train-mode forward logits."""
+    from repro.models import ssm as S
+    cfg = get_smoke_config("mamba2-130m")
+    params = S.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 32)), jnp.int32)
+    train_logits = S.forward(params, tokens, cfg)        # [1, 32, V]
+
+    cache = S.init_cache(cfg, 1, 32)
+    outs = []
+    for t in range(32):
+        logits, cache = S.decode_step(params, cache, tokens[:, t : t + 1], cfg)
+        outs.append(logits[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(dec_logits - train_logits)))
+    assert err < 2e-2, err
+
+
+def test_swa_rolling_cache_matches_full_cache():
+    """Sliding-window decode with a rolling window-sized cache must equal
+    decode with a full-length cache (mixtral-style SWA)."""
+    from repro.models import transformer as T
+    cfg = get_smoke_config("mixtral-8x7b")          # sliding_window=32
+    full_cfg = cfg
+    params = T.init_params(jax.random.PRNGKey(2), cfg)
+    rng = np.random.default_rng(1)
+    prompt = jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 40)), jnp.int32)
+
+    # rolling cache sized by the window
+    _, cache_roll = T.prefill(params, prompt, cfg, max_len=64)
+    assert cache_roll["k"].shape[2] == cfg.sliding_window
+    # reference: replay decode from a long cache via teacher-forced forward
+    ref_logits = T.forward(params, prompt, cfg)
+
+    tok = prompt[:, -1:]
+    logits_roll, _ = T.decode_step(params, dict(cache_roll, cur=cache_roll["cur"] - 1,
+                                                k=cache_roll["k"], v=cache_roll["v"]),
+                                   tok, cfg)
+    err = float(jnp.max(jnp.abs(logits_roll[:, -1] - ref_logits[:, -1])))
+    assert err < 5e-2, err
+
+
+def test_full_configs_construct():
+    """The FULL configs build abstract params with the published shapes (no
+    allocation — eval_shape only)."""
+    from repro.configs import get_config
+    import math
+    expected_params = {
+        "llama3-405b": (390e9, 430e9),
+        "qwen1.5-110b": (95e9, 120e9),
+        "mixtral-8x7b": (42e9, 50e9),
+        "llama3.2-1b": (1.0e9, 1.6e9),
+        "qwen1.5-0.5b": (0.4e9, 0.65e9),
+        "mamba2-130m": (0.1e9, 0.2e9),
+        "granite-moe-3b-a800m": (2.0e9, 4.0e9),
+        "zamba2-2.7b": (2.0e9, 3.5e9),
+        "whisper-large-v3": (1.2e9, 2.2e9),
+        "qwen2-vl-2b": (1.2e9, 2.2e9),
+    }
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        tree = jax.eval_shape(lambda c=cfg: adapters.init_fn(jax.random.PRNGKey(0), c))
+        n = sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+        lo, hi = expected_params[arch]
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params out of [{lo/1e9},{hi/1e9}]"
