@@ -1,8 +1,24 @@
-"""Kernel micro-benchmarks: the Pallas matcher's pure-jnp twin (the kernel
-itself runs in interpret mode on CPU — timing it would measure the Python
-interpreter, so we time the algorithmically identical ref path and the
-MoE matching router which is the technique's in-framework hot spot)."""
+"""Kernel micro-benchmarks.
+
+Two matcher paths are timed, selectable with ``--matcher``:
+
+* ``jnp``      — the single-device tiled matcher (``core.skipper``) and the
+                 windowed oracle / MoE router micro-benches.
+* ``windowed`` — the device-resident window pipeline (``skipper_match``):
+                 schedule precomputed once on the host, then the COMPILED
+                 (non-interpret) pipeline is timed end-to-end. On CPU the
+                 compiled path is the pipeline's XLA twin — identical
+                 schedule and semantics, one compilation unit; on TPU the
+                 same driver compiles the Pallas kernel via Mosaic.
+
+``--smoke`` runs a seconds-scale subset (CI); ``--record out.json`` writes
+the rows as JSON so later PRs have a perf trajectory
+(benchmarks/baseline_small.json is the committed baseline).
+"""
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -10,18 +26,20 @@ import numpy as np
 
 from benchmarks.common import emit, time_call
 from repro.core.bipartite import bmatch_assign
+from repro.core.skipper import skipper
+from repro.graphs import build_window_schedule, grid_graph, rmat_graph
+from repro.kernels.skipper_match import skipper_match
 from repro.kernels.skipper_match.ref import ref_match_window
 
 
-def run(scale: str = "small"):
-    rows = []
+def _bench_jnp(rows, smoke: bool):
     # windowed matcher throughput (edges/s) across tile sizes
     rng = np.random.default_rng(0)
-    w, m = 2048, 1 << 16
+    w, m = 2048, 1 << (13 if smoke else 16)
     u = jnp.asarray(rng.integers(0, w, m), jnp.int32)
     v = jnp.asarray(rng.integers(0, w, m), jnp.int32)
     st0 = jnp.zeros((w,), jnp.int32)
-    for tile in (128, 256, 512):
+    for tile in (128,) if smoke else (128, 256, 512):
         ut = u.reshape(-1, tile)
         vt = v.reshape(-1, tile)
         t = time_call(lambda: ref_match_window(ut, vt, st0)[1])
@@ -29,7 +47,8 @@ def run(scale: str = "small"):
                          f"{m / t / 1e6:.1f}Medges_s"))
 
     # MoE matching router: tokens x experts
-    for n_tok, n_exp, k in ((4096, 8, 2), (4096, 40, 8)):
+    cases = ((1024, 8, 2),) if smoke else ((4096, 8, 2), (4096, 40, 8))
+    for n_tok, n_exp, k in cases:
         kp = min(n_exp, k + 2)
         scores = jax.random.normal(jax.random.PRNGKey(1), (n_tok, n_exp))
         vals, idx = jax.lax.top_k(scores, kp)
@@ -47,8 +66,66 @@ def run(scale: str = "small"):
         t = time_call(assign)
         rows.append(emit(f"kernel/moe_router/t{n_tok}_e{n_exp}_k{k}", t,
                          f"{n_tok / t / 1e6:.2f}Mtok_s"))
+
+
+def _bench_windowed(rows, scale: str, smoke: bool):
+    """Compiled windowed-pipeline timings vs the jnp matcher, RMAT + grid."""
+    if smoke:
+        graphs = {"rmat10": rmat_graph(10, 8, seed=1), "grid_64": grid_graph(64, 64)}
+        window, tile = 512, 128
+    elif scale == "large":
+        graphs = {"rmat16": rmat_graph(16, 16, seed=1), "grid_1k": grid_graph(1024, 1024)}
+        window, tile = 4096, 256
+    else:
+        graphs = {"rmat14": rmat_graph(14, 16, seed=1), "grid_256": grid_graph(256, 256)}
+        window, tile = 2048, 256
+
+    # On TPU the driver compiles the Pallas kernel via Mosaic; elsewhere the
+    # compiled path is the pipeline's XLA twin (identical schedule/semantics).
+    backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    iters = 1 if smoke else 3
+    for name, g in graphs.items():
+        m = g.num_edges
+        sched = build_window_schedule(g, window=window, tile_size=tile)
+        t = time_call(
+            lambda: skipper_match(schedule=sched, backend=backend),
+            warmup=1, iters=iters,
+        )
+        num_boundary = int((sched.boundary_index >= 0).sum())
+        frac = 1.0 - num_boundary / max(1, m)
+        rows.append(emit(
+            f"kernel/windowed_pipeline/{name}", t,
+            f"{m / t / 1e6:.1f}Medges_s_intra{frac:.2f}",
+        ))
+        tj = time_call(lambda: skipper(g, tile_size=tile), warmup=1, iters=iters)
+        rows.append(emit(f"kernel/jnp_matcher/{name}", tj,
+                         f"{m / tj / 1e6:.1f}Medges_s"))
+
+
+def run(scale: str = "small", matcher: str = "both", smoke: bool = False,
+        record: str | None = None):
+    rows = []
+    if matcher in ("both", "jnp"):
+        _bench_jnp(rows, smoke)
+    if matcher in ("both", "windowed"):
+        _bench_windowed(rows, scale, smoke)
+    if record:
+        data = {}
+        for line in rows:
+            name, us, derived = line.split(",", 2)
+            data[name] = {"us_per_call": float(us), "derived": derived}
+        with open(record, "w") as f:
+            json.dump(data, f, indent=2, sort_keys=True)
+            f.write("\n")
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="small", choices=["small", "large"])
+    ap.add_argument("--matcher", default="both", choices=["both", "jnp", "windowed"])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--record", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(args.scale, matcher=args.matcher, smoke=args.smoke, record=args.record)

@@ -19,6 +19,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "large"])
     ap.add_argument("--only", default=None)
+    ap.add_argument("--matcher", default="both", choices=["both", "jnp", "windowed"],
+                    help="which matcher path kernel_bench times "
+                         "(jnp tiled vs device-resident windowed pipeline)")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -40,7 +43,10 @@ def main() -> None:
         if args.only and name != args.only:
             continue
         try:
-            mod.run(args.scale)
+            if name == "kernels":
+                mod.run(args.scale, matcher=args.matcher)
+            else:
+                mod.run(args.scale)
         except Exception as e:
             failed.append(name)
             traceback.print_exc()

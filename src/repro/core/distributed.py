@@ -39,7 +39,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.types import ACC, MCHD, STATE_DTYPE, Counters, MatchResult
-from repro.core.skipper import tile_pass
+from repro.core.engine import tile_pass
 from repro.graphs.types import EdgeList
 from repro.graphs.partition import dispersed_blocks
 

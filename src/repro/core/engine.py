@@ -1,0 +1,181 @@
+"""The shared first-claim engine — Skipper's invariant in ONE place.
+
+Every matcher in this repo (the single-device tiled matcher in
+``core/skipper.py``, the shard_map distributed matcher in
+``core/distributed.py``, the Pallas TPU kernel in
+``kernels/skipper_match/kernel.py`` and its jnp oracle in
+``kernels/skipper_match/ref.py``) enforces the same invariant, ported from the
+paper's per-edge CAS protocol (Alg. 1):
+
+    every edge is decided (matched / dead) at the moment it is touched, and an
+    edge is dead only if one of its endpoints is already MCHD.
+
+The vectorized form of that invariant is the *first-claim round* over a tile
+of T edges:
+
+    free_i    = both endpoints ACC and edge undecided
+    blocked_i = exists j < i in the tile: free_j and edges i, j share an endpoint
+    commit_i  = free_i and not blocked_i      # mutually endpoint-disjoint!
+
+This module owns the two pieces that must never drift between matchers:
+
+* ``share_matrix``       — the triangular endpoint-sharing (JIT-conflict)
+                           matrix. Built with 2-D ``broadcasted_iota`` so the
+                           exact same code traces inside a Pallas TPU kernel
+                           and in plain XLA.
+* ``first_claim_commit`` — one round's commit/blocked decision from gathered
+                           endpoint states.
+
+plus the two standard drivers built on them:
+
+* ``run_first_claim_rounds`` — the unrolled round loop, parameterized over the
+  caller's gather/scatter (the kernel passes MXU one-hot matmuls closing over
+  a VMEM ref; jnp callers pass ``.at`` indexing).
+* ``tile_pass`` — the full jnp tile pass (rounds + exact sequential fallback)
+  consumed by the single-device and distributed matchers and by the
+  device-resident pipeline's boundary epilogue.
+
+State encoding is the paper's: ACC=0, MCHD=2 (comparisons below use plain
+ints so they work for the uint8 at-rest array and the int32 VMEM window
+alike).
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+ACC = 0
+MCHD = 2
+
+
+def share_matrix(u: jax.Array, v: jax.Array, valid: jax.Array) -> jax.Array:
+    """conflict[i, j] = True iff j < i, both valid, and edges i, j share an
+    endpoint. TPU-safe: strictly-lower-triangular mask via 2-D iota (Pallas
+    TPU requires >= 2-D iota; XLA lowers it identically)."""
+    t = u.shape[0]
+    share = (
+        (u[:, None] == u[None, :])
+        | (u[:, None] == v[None, :])
+        | (v[:, None] == u[None, :])
+        | (v[:, None] == v[None, :])
+    )
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    lower = cols < rows
+    return share & lower & valid[None, :] & valid[:, None]
+
+
+def first_claim_commit(
+    su: jax.Array,
+    sv: jax.Array,
+    valid: jax.Array,
+    matched: jax.Array,
+    conflict: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One first-claim round. ``su``/``sv`` are the gathered endpoint states.
+
+    Returns (commit, blocked): ``commit`` edges are mutually endpoint-disjoint
+    by construction (the lowest-index free edge of any conflict chain is never
+    blocked, so every round makes progress)."""
+    free = valid & (~matched) & (su == ACC) & (sv == ACC)
+    blocked = jnp.any(conflict & free[None, :], axis=1) & free
+    commit = free & ~blocked
+    return commit, blocked
+
+
+def run_first_claim_rounds(
+    u: jax.Array,
+    v: jax.Array,
+    valid: jax.Array,
+    read_state: Callable[[], Tuple[jax.Array, jax.Array]],
+    apply_commits: Callable[[jax.Array], None],
+    vector_rounds: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Run the unrolled round loop over one tile.
+
+    ``read_state()`` gathers (state[u], state[v]); ``apply_commits(commit)``
+    scatters MCHD to the endpoints of committed edges — both close over the
+    caller's state container (a VMEM ref in the kernel, an array cell in jnp
+    callers). Returns (matched, conflicts_per_edge)."""
+    t = u.shape[0]
+    conflict = share_matrix(u, v, valid)
+    matched = jnp.zeros((t,), jnp.bool_)
+    conflicts = jnp.zeros((t,), jnp.int32)
+    for _ in range(vector_rounds):
+        su, sv = read_state()
+        commit, blocked = first_claim_commit(su, sv, valid, matched, conflict)
+        apply_commits(commit)
+        matched = matched | commit
+        conflicts = conflicts + blocked.astype(jnp.int32)
+    return matched, conflicts
+
+
+def tile_pass(
+    state: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    *,
+    n: int,
+    vector_rounds: int,
+    fallback: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Process one edge tile (first-claim vector rounds + exact sequential
+    fallback, unless ``fallback=False``) against a full ``state`` array of
+    ``n`` vertices. Shared by the single-device matcher, the distributed
+    local pass / replay, and the device-resident pipeline's boundary
+    epilogue.
+
+    Returns (state, matched, conflicts_per_edge, fallback_taken)."""
+    valid = (u != v) & (u >= 0)
+
+    class _Cell:
+        pass
+
+    cell = _Cell()
+    cell.state = state
+
+    def read_state():
+        su = cell.state[jnp.where(valid, u, 0)]
+        sv = cell.state[jnp.where(valid, v, 0)]
+        return su, sv
+
+    def apply_commits(commit):
+        st = cell.state
+        st = st.at[jnp.where(commit, u, n)].set(MCHD, mode="drop")
+        st = st.at[jnp.where(commit, v, n)].set(MCHD, mode="drop")
+        cell.state = st
+
+    matched, conflicts = run_first_claim_rounds(
+        u, v, valid, read_state, apply_commits, vector_rounds
+    )
+    state = cell.state
+
+    if not fallback:
+        return state, matched, conflicts, jnp.zeros((), jnp.bool_)
+
+    # Exact sequential fallback for pathological chains (rare): guarded so the
+    # scan body only runs when some edge is still undecided-and-free.
+    su, sv = read_state()
+    remaining = valid & (~matched) & (su == ACC) & (sv == ACC)
+
+    def run_fallback(args):
+        state, matched = args
+
+        def fstep(st, uvr):
+            uu, vv, rem = uvr
+            s1 = st[jnp.where(rem, uu, 0)]
+            s2 = st[jnp.where(rem, vv, 0)]
+            take = rem & (s1 == ACC) & (s2 == ACC)
+            st = st.at[jnp.where(take, uu, n)].set(MCHD, mode="drop")
+            st = st.at[jnp.where(take, vv, n)].set(MCHD, mode="drop")
+            return st, take
+
+        state, extra = jax.lax.scan(fstep, state, (u, v, remaining))
+        return state, matched | extra
+
+    state, matched = jax.lax.cond(
+        jnp.any(remaining), run_fallback, lambda args: args, (state, matched)
+    )
+    return state, matched, conflicts, jnp.any(remaining)

@@ -9,7 +9,9 @@ enforces:
     edge is dead only if one of its endpoints is already MCHD.
 
 We enforce the same invariant with vectorized *first-claim* conflict
-resolution over VMEM-sized tiles of the edge stream:
+resolution over VMEM-sized tiles of the edge stream (the round logic itself
+lives in ``core/engine.py``, shared with the Pallas kernel and the
+distributed matcher):
 
   tile round (vectorized, VPU):
     free_i    = both endpoints ACC and edge undecided
@@ -50,83 +52,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import ACC, MCHD, STATE_DTYPE, Counters, MatchResult
+from repro.core.types import ACC, STATE_DTYPE, Counters, MatchResult
+from repro.core.engine import tile_pass
 from repro.graphs.types import EdgeList
 from repro.graphs.partition import pad_edges
 
-
-def _share_matrix(u: jax.Array, v: jax.Array, valid: jax.Array) -> jax.Array:
-    """conflict[i, j] = True iff j < i, both valid, and edges share an endpoint."""
-    t = u.shape[0]
-    share = (
-        (u[:, None] == u[None, :])
-        | (u[:, None] == v[None, :])
-        | (v[:, None] == u[None, :])
-        | (v[:, None] == v[None, :])
-    )
-    lower = jnp.tril(jnp.ones((t, t), jnp.bool_), k=-1)
-    return share & lower & valid[None, :] & valid[:, None]
-
-
-def tile_pass(
-    state: jax.Array,
-    u: jax.Array,
-    v: jax.Array,
-    *,
-    n: int,
-    vector_rounds: int,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Process one edge tile (first-claim vector rounds + exact sequential
-    fallback). Shared by the single-device matcher, the distributed replay,
-    and the kernels' reference path.
-
-    Returns (state, matched, conflicts_per_edge, fallback_taken)."""
-    t = u.shape[0]
-    valid = (u != v) & (u >= 0)
-    conflict = _share_matrix(u, v, valid)
-
-    matched = jnp.zeros((t,), jnp.bool_)
-    conflicts = jnp.zeros((t,), jnp.int32)
-
-    def gather_state(idx):
-        return state[jnp.where(valid, idx, 0)]
-
-    for _ in range(vector_rounds):
-        su = state[jnp.where(valid, u, 0)]
-        sv = state[jnp.where(valid, v, 0)]
-        free = valid & (~matched) & (su == ACC) & (sv == ACC)
-        blocked = jnp.any(conflict & free[None, :], axis=1) & free
-        commit = free & ~blocked
-        state = state.at[jnp.where(commit, u, n)].set(MCHD, mode="drop")
-        state = state.at[jnp.where(commit, v, n)].set(MCHD, mode="drop")
-        matched = matched | commit
-        conflicts = conflicts + blocked.astype(jnp.int32)
-
-    # Exact sequential fallback for pathological chains (rare): guarded so the
-    # scan body only runs when some edge is still undecided-and-free.
-    su = state[jnp.where(valid, u, 0)]
-    sv = state[jnp.where(valid, v, 0)]
-    remaining = valid & (~matched) & (su == ACC) & (sv == ACC)
-
-    def fallback(args):
-        state, matched = args
-
-        def fstep(st, uvr):
-            uu, vv, rem = uvr
-            s1 = st[jnp.where(rem, uu, 0)]
-            s2 = st[jnp.where(rem, vv, 0)]
-            take = rem & (s1 == ACC) & (s2 == ACC)
-            st = st.at[jnp.where(take, uu, n)].set(MCHD, mode="drop")
-            st = st.at[jnp.where(take, vv, n)].set(MCHD, mode="drop")
-            return st, take
-
-        state, extra = jax.lax.scan(fstep, state, (u, v, remaining))
-        return state, matched | extra
-
-    state, matched = jax.lax.cond(
-        jnp.any(remaining), fallback, lambda args: args, (state, matched)
-    )
-    return state, matched, conflicts, jnp.any(remaining)
+__all__ = ["skipper", "tile_pass"]
 
 
 @partial(

@@ -17,7 +17,8 @@ from repro.graphs.generators import (
     path_graph,
 )
 from repro.graphs.csr import edges_to_csr, symmetrize, dedup_edges
-from repro.graphs.partition import dispersed_blocks, pad_edges
+from repro.graphs.partition import dispersed_blocks, pad_edges, contiguous_chunks
+from repro.graphs.windows import WindowSchedule, build_window_schedule
 
 __all__ = [
     "EdgeList",
@@ -34,4 +35,7 @@ __all__ = [
     "dedup_edges",
     "dispersed_blocks",
     "pad_edges",
+    "contiguous_chunks",
+    "WindowSchedule",
+    "build_window_schedule",
 ]

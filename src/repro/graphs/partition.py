@@ -16,7 +16,7 @@ from __future__ import annotations
 
 from typing import Tuple
 
-import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.graphs.types import EdgeList, INVALID
@@ -57,9 +57,10 @@ def dispersed_blocks(
 
 def contiguous_chunks(
     edges: EdgeList, num_chunks: int
-) -> Tuple[np.ndarray, np.ndarray]:
+) -> Tuple[jax.Array, jax.Array]:
     """Split into equal contiguous chunks (the *non*-dispersed baseline used to
-    show the scheduler matters)."""
+    show the scheduler matters). Returns device arrays of shape
+    [num_chunks, ceil(m / num_chunks)], padded with INVALID."""
     padded = pad_edges(edges, num_chunks)
     per = padded.num_edges // num_chunks
     u = padded.u.reshape(num_chunks, per)

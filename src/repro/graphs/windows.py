@@ -1,0 +1,167 @@
+"""One-shot host precompute of the device-resident window schedule.
+
+The paper's locality phase cuts the vertex-id space into windows of ``window``
+ids and buckets canonical edges by window so the hot loop only ever touches a
+VMEM-sized slice of the state array. The old driver re-derived this per window
+on the host, with a numpy round-trip between Pallas launches; this module
+computes the *whole* schedule once, with static shapes, so the kernel driver
+traces a single ``pallas_call`` over a 2-D ``(window, tile)`` grid and never
+returns to the host mid-graph.
+
+Layout (see DESIGN.md "Window-schedule layout"):
+
+    u_tiles / v_tiles : int32[num_windows, tiles_per_window * tile_size]
+        window-LOCAL endpoint ids (global id minus window * window_size),
+        -1 padding. Row w, flattened slot t * tile_size + l is tile t, lane l
+        of window w.
+    edge_index        : same shape; original stream index of the edge in that
+        slot (-1 for padding). This is the slot -> stream half of the
+        round-trip mapping; ``stream_to_slot`` computes the inverse.
+    boundary_u/v/index: int32[num_boundary_padded] cross-window edges in
+        stream order (GLOBAL ids), padded to a tile multiple; resolved by the
+        in-device epilogue against the full state.
+
+The dispersed deal (paper §IV-C) is applied *within* each window: lane l of
+the window's tile stream walks its own contiguous run of that window's edges
+(locality preserved per lane) while the lanes of any one tile sit far apart
+in the window's stream (dispersed), keeping intra-tile endpoint sharing — the
+JIT-conflict source — Θ(λ²)-rare.
+
+``tiles_per_window`` is the max over windows (static shapes are the price of
+a single compilation unit); skewed graphs pay padding for it — see DESIGN.md
+§2 A7 for the accounting.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.graphs.types import EdgeList
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowSchedule:
+    """Static-shape device schedule for one graph. All arrays are host numpy;
+    the driver moves them to device once, at trace time."""
+
+    window: int           # vertex ids per window
+    tile_size: int
+    num_windows: int
+    tiles_per_window: int
+    num_vertices: int
+    num_edges: int        # original stream length (mask/conflicts length)
+    u_tiles: np.ndarray   # int32[num_windows, tiles_per_window * tile_size], local ids
+    v_tiles: np.ndarray
+    edge_index: np.ndarray  # int32, same shape, stream index or -1
+    boundary_u: np.ndarray  # int32[num_boundary_padded], global ids
+    boundary_v: np.ndarray
+    boundary_index: np.ndarray
+
+    @property
+    def num_boundary_padded(self) -> int:
+        return int(self.boundary_u.shape[0])
+
+    def slot_to_stream(self) -> np.ndarray:
+        """int32[num_windows, tiles_per_window, tile_size] — stream index of
+        each schedule slot (-1 = padding)."""
+        return self.edge_index.reshape(
+            self.num_windows, self.tiles_per_window, self.tile_size
+        )
+
+    def stream_to_slot(self) -> np.ndarray:
+        """int32[num_edges, 3] — (window, tile, lane) of each stream position,
+        or (-1, -1, -1) for edges not in the windowed schedule (boundary /
+        invalid edges)."""
+        out = np.full((self.num_edges, 3), -1, np.int32)
+        s2s = self.slot_to_stream()
+        w, t, l = np.nonzero(s2s >= 0)
+        out[s2s[w, t, l]] = np.stack([w, t, l], axis=1).astype(np.int32)
+        return out
+
+
+def _dispersed_within(idx: np.ndarray, tiles: int, tile_size: int) -> np.ndarray:
+    """Deal a window's padded stream [tiles * tile_size] so tile t, lane l
+    holds stream slot l * tiles + t: each lane walks a contiguous run, lanes
+    of one tile are ``tiles`` apart."""
+    return idx.reshape(tile_size, tiles).T.reshape(-1)
+
+
+def build_window_schedule(
+    edges: EdgeList,
+    window: int = 2048,
+    tile_size: int = 256,
+    dispersed: bool = True,
+) -> WindowSchedule:
+    """Bucket canonical edges by vertex window and pack the dense schedule.
+
+    Pure host/numpy, one pass over the edge list; every output shape depends
+    only on (graph, window, tile_size) so the device driver traces once.
+    """
+    n = edges.num_vertices
+    e = edges.canonical()
+    u = np.asarray(e.u)
+    v = np.asarray(e.v)
+    m = int(u.shape[0])
+
+    valid = (u >= 0) & (u != v)
+    wu = np.where(valid, u // window, 0)
+    wv = np.where(valid, v // window, 0)
+    intra = valid & (wu == wv)
+    boundary = valid & ~intra
+    num_windows = max(1, -(-n // window))
+
+    counts = np.bincount(wu[intra], minlength=num_windows)
+    tiles_per_window = max(1, int(-(-counts.max() // tile_size))) if m else 1
+    slots = tiles_per_window * tile_size
+
+    u_tiles = np.full((num_windows, slots), -1, np.int32)
+    v_tiles = np.full((num_windows, slots), -1, np.int32)
+    edge_index = np.full((num_windows, slots), -1, np.int32)
+
+    # stable bucket: edges of window w in stream order
+    order = np.nonzero(intra)[0]
+    win_of = wu[order]
+    sort = np.argsort(win_of, kind="stable")
+    order = order[sort]
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for w in range(num_windows):
+        sel = order[starts[w] : starts[w + 1]]
+        if sel.size == 0:
+            continue
+        pad = np.full((slots,), -1, np.int64)
+        pad[: sel.size] = sel
+        if dispersed:
+            pad = _dispersed_within(pad, tiles_per_window, tile_size)
+        present = pad >= 0
+        src = np.where(present, pad, 0)
+        base = w * window
+        u_tiles[w] = np.where(present, u[src] - base, -1).astype(np.int32)
+        v_tiles[w] = np.where(present, v[src] - base, -1).astype(np.int32)
+        edge_index[w] = np.where(present, pad, -1).astype(np.int32)
+
+    bsel = np.nonzero(boundary)[0]
+    nb = int(bsel.size)
+    nb_pad = -(-nb // tile_size) * tile_size if nb else 0
+    boundary_u = np.full((nb_pad,), -1, np.int32)
+    boundary_v = np.full((nb_pad,), -1, np.int32)
+    boundary_index = np.full((nb_pad,), -1, np.int32)
+    boundary_u[:nb] = u[bsel]
+    boundary_v[:nb] = v[bsel]
+    boundary_index[:nb] = bsel.astype(np.int32)
+
+    return WindowSchedule(
+        window=window,
+        tile_size=tile_size,
+        num_windows=num_windows,
+        tiles_per_window=tiles_per_window,
+        num_vertices=n,
+        num_edges=m,
+        u_tiles=u_tiles,
+        v_tiles=v_tiles,
+        edge_index=edge_index,
+        boundary_u=boundary_u,
+        boundary_v=boundary_v,
+        boundary_index=boundary_index,
+    )

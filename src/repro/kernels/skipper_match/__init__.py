@@ -1,4 +1,14 @@
-from repro.kernels.skipper_match.ops import skipper_match_window, skipper_match
-from repro.kernels.skipper_match.ref import ref_match_window
+from repro.kernels.skipper_match.ops import (
+    skipper_match_window,
+    skipper_match,
+    pipeline_trace_count,
+)
+from repro.kernels.skipper_match.ref import ref_match_window, make_ref_pipeline
 
-__all__ = ["skipper_match_window", "skipper_match", "ref_match_window"]
+__all__ = [
+    "skipper_match_window",
+    "skipper_match",
+    "pipeline_trace_count",
+    "ref_match_window",
+    "make_ref_pipeline",
+]

@@ -1,15 +1,23 @@
 """Pallas TPU kernel: windowed single-pass greedy matching (Skipper core).
 
-TPU mapping of the paper's hot loop (Alg. 1 lines 5-18). The grid walks edge
-tiles *sequentially per core* — TPU grid semantics — so the vertex-state
-window can live in VMEM across grid steps (constant index_map + input/output
-aliasing) and the algorithm is race-free by construction; the asynchrony of
-the CPU original is re-introduced one level up (across cores/devices, see
-core/distributed.py).
+TPU mapping of the paper's hot loop (Alg. 1 lines 5-18). Two entry points:
 
-MXU/VPU mapping per tile of T edges over a W-vertex VMEM window:
+* ``build_window_matcher``   — 1-D grid over the tiles of ONE vertex window
+  (the unit-test / debugging surface).
+* ``build_pipeline_matcher`` — 2-D grid ``(window, tile)`` over the WHOLE
+  graph's window schedule (``graphs/windows.py``). The state BlockSpec index
+  map depends only on the window coordinate, so the W-vertex state block
+  stays resident in VMEM across all tile steps of a window and is swapped
+  (written back to HBM, next block DMA'd in) exactly once per window — zero
+  host round-trips for the full graph. TPU grids iterate the LAST dimension
+  innermost, which is what makes the residency work.
 
-  * state gather  : one_hot(u, W) @ state — an (T, W) x (W,) contraction; on
+Both wrap the same per-tile body. The first-claim decision logic (conflict
+matrix + commit rule) is ``core/engine.py`` — shared verbatim with the jnp
+matchers so the invariant cannot drift; only the gather/scatter is
+kernel-specific:
+
+  * state gather  : one_hot(u, W) @ state — a (T, W) x (W,) contraction; on
     TPU this hits the MXU instead of serializing into scalar loads. W is the
     BlockSpec-controlled VMEM working set (W * 4 B for the state vector plus
     the T x W one-hots).
@@ -37,8 +45,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-ACC = 0
-MCHD = 2
+from repro.core import engine
+from repro.core.engine import ACC, MCHD
 
 
 def _one_hot(idx: jax.Array, width: int) -> jax.Array:
@@ -48,72 +56,34 @@ def _one_hot(idx: jax.Array, width: int) -> jax.Array:
     return (cols == idx[:, None]).astype(jnp.int32)
 
 
-def skipper_window_kernel(
-    u_ref,
-    v_ref,
-    state_in_ref,
-    state_ref,
-    matched_ref,
-    conflicts_ref,
-    *,
-    vector_rounds: int,
-    window: int,
-    fallback: bool,
-):
-    """One grid step = one tile of T window-local edges.
+def _match_tile(u, v, state_ref, *, vector_rounds: int, window: int, fallback: bool):
+    """Run one tile of T window-local edges against the VMEM-resident state.
 
-    u_ref/v_ref: int32[T] window-local endpoint ids (-1 = padding).
-    state_in_ref: int32[W] initial state (read at step 0 only).
-    state_ref: int32[W] in/out VMEM-resident state window (aliased).
-    matched_ref: int32[T] per-edge decision (1 = matched).
-    conflicts_ref: int32[T] rounds spent blocked (Table II instrumentation).
-    """
-    t = u_ref.shape[0]
-    step = pl.program_id(0)
-
-    @pl.when(step == 0)
-    def _init():
-        state_ref[...] = state_in_ref[...]
-
-    u = u_ref[...]
-    v = v_ref[...]
+    Writes committed MCHDs into ``state_ref`` round by round; returns
+    (matched bool[T], conflicts int32[T])."""
     valid = (u >= 0) & (u != v)
 
     # one-hots are reused by every round: gather AND scatter operands.
     hu = _one_hot(jnp.where(valid, u, -1), window)  # [T, W]
     hv = _one_hot(jnp.where(valid, v, -1), window)
 
-    # triangular endpoint-sharing matrix (the JIT-conflict detector)
-    share = (
-        (u[:, None] == u[None, :])
-        | (u[:, None] == v[None, :])
-        | (v[:, None] == u[None, :])
-        | (v[:, None] == v[None, :])
-    )
-    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
-    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
-    lower = cols < rows
-    conflict = share & lower & valid[None, :] & valid[:, None]
-
-    matched = jnp.zeros((t,), jnp.bool_)
-    conflicts = jnp.zeros((t,), jnp.int32)
-
-    for _ in range(vector_rounds):
+    def read_state():
         state = state_ref[...]
-        su = hu @ state  # MXU gather
-        sv = hv @ state
-        free = valid & (~matched) & (su == ACC) & (sv == ACC)
-        blocked = jnp.any(conflict & free[None, :], axis=1) & free
-        commit = free & ~blocked
+        return hu @ state, hv @ state  # MXU gathers
+
+    def apply_commits(commit):
         # conflict-free scatter: committed edges are endpoint-disjoint
         ci = commit.astype(jnp.int32)
         hit = (ci @ hu) + (ci @ hv)  # [W]
-        state_ref[...] = jnp.where(hit > 0, MCHD, state)
-        matched = matched | commit
-        conflicts = conflicts + blocked.astype(jnp.int32)
+        state_ref[...] = jnp.where(hit > 0, MCHD, state_ref[...])
+
+    matched, conflicts = engine.run_first_claim_rounds(
+        u, v, valid, read_state, apply_commits, vector_rounds
+    )
 
     if fallback:
         # exact sequential cleanup of pathological chains (rare)
+        t = u.shape[0]
         state = state_ref[...]
         su = hu @ state
         sv = hv @ state
@@ -138,8 +108,80 @@ def skipper_window_kernel(
         state, matched = jax.lax.fori_loop(0, t, body, (state, matched))
         state_ref[...] = state
 
+    return matched, conflicts
+
+
+def skipper_window_kernel(
+    u_ref,
+    v_ref,
+    state_in_ref,
+    state_ref,
+    matched_ref,
+    conflicts_ref,
+    *,
+    vector_rounds: int,
+    window: int,
+    fallback: bool,
+):
+    """One grid step = one tile of T window-local edges (1-D grid, one window).
+
+    u_ref/v_ref: int32[T] window-local endpoint ids (-1 = padding).
+    state_in_ref: int32[W] initial state (read at step 0 only).
+    state_ref: int32[W] in/out VMEM-resident state window (aliased).
+    matched_ref: int32[T] per-edge decision (1 = matched).
+    conflicts_ref: int32[T] rounds spent blocked (Table II instrumentation).
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        state_ref[...] = state_in_ref[...]
+
+    matched, conflicts = _match_tile(
+        u_ref[...], v_ref[...], state_ref,
+        vector_rounds=vector_rounds, window=window, fallback=fallback,
+    )
     matched_ref[...] = matched.astype(jnp.int32)
     conflicts_ref[...] = conflicts
+
+
+def skipper_pipeline_kernel(
+    u_ref,
+    v_ref,
+    state_in_ref,
+    state_ref,
+    matched_ref,
+    conflicts_ref,
+    *,
+    vector_rounds: int,
+    window: int,
+    fallback: bool,
+):
+    """One grid step = (window w, tile t). Blocks carry a leading length-1
+    window axis; the state block is swapped per *window*, not per step, so it
+    is initialized when t == 0 and stays VMEM-resident for all tiles of w."""
+    t = pl.program_id(1)
+
+    @pl.when(t == 0)
+    def _init():
+        state_ref[...] = state_in_ref[...]
+
+    # views over the [W]-vector / [T]-vector payloads of the (1, ·) blocks
+    class _Row:
+        """[W]-vector view of the (1, W) state block (keeps _match_tile 1-D)."""
+
+        def __getitem__(self, _):
+            return state_ref[0, :]
+
+        def __setitem__(self, _, value):
+            state_ref[0, :] = value
+
+    matched, conflicts = _match_tile(
+        u_ref[0, :], v_ref[0, :], _Row(),
+        vector_rounds=vector_rounds, window=window, fallback=fallback,
+    )
+    matched_ref[0, :] = matched.astype(jnp.int32)
+    conflicts_ref[0, :] = conflicts
 
 
 def build_window_matcher(
@@ -151,7 +193,7 @@ def build_window_matcher(
     interpret: bool = True,
 ):
     """Construct the pallas_call for a (num_tiles x tile_size) edge stream
-    over a ``window``-vertex state window."""
+    over a single ``window``-vertex state window."""
     kernel = functools.partial(
         skipper_window_kernel,
         vector_rounds=vector_rounds,
@@ -175,6 +217,53 @@ def build_window_matcher(
             jax.ShapeDtypeStruct((window,), jnp.int32),
             jax.ShapeDtypeStruct((num_tiles * tile_size,), jnp.int32),
             jax.ShapeDtypeStruct((num_tiles * tile_size,), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+
+
+def build_pipeline_matcher(
+    num_windows: int,
+    tiles_per_window: int,
+    tile_size: int,
+    window: int,
+    vector_rounds: int = 3,
+    fallback: bool = True,
+    interpret: bool = True,
+):
+    """Construct ONE pallas_call covering every (window, tile) of the graph's
+    schedule.
+
+    Inputs: u/v int32[num_windows, tiles_per_window * tile_size] window-local
+    ids, state0 int32[num_windows, window]. Outputs: (state, matched,
+    conflicts) with the same layouts. The state index map ``(w, t) -> (w, 0)``
+    ignores t: the revolving VMEM block is written back only when w changes —
+    one HBM round-trip per window, zero host round-trips.
+    """
+    kernel = functools.partial(
+        skipper_pipeline_kernel,
+        vector_rounds=vector_rounds,
+        window=window,
+        fallback=fallback,
+    )
+    slots = tiles_per_window * tile_size
+    return pl.pallas_call(
+        kernel,
+        grid=(num_windows, tiles_per_window),
+        in_specs=[
+            pl.BlockSpec((1, tile_size), lambda w, t: (w, t)),   # u tiles
+            pl.BlockSpec((1, tile_size), lambda w, t: (w, t)),   # v tiles
+            pl.BlockSpec((1, window), lambda w, t: (w, 0)),      # initial state
+        ],
+        out_specs=[
+            pl.BlockSpec((1, window), lambda w, t: (w, 0)),      # state (resident per window)
+            pl.BlockSpec((1, tile_size), lambda w, t: (w, t)),   # matched
+            pl.BlockSpec((1, tile_size), lambda w, t: (w, t)),   # conflicts
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_windows, window), jnp.int32),
+            jax.ShapeDtypeStruct((num_windows, slots), jnp.int32),
+            jax.ShapeDtypeStruct((num_windows, slots), jnp.int32),
         ],
         interpret=interpret,
     )

@@ -1,22 +1,53 @@
-"""Jit'd wrappers around the skipper_match Pallas kernel.
+"""Jit'd wrappers around the skipper_match Pallas kernels.
 
 ``skipper_match_window`` — raw windowed matcher (edges already window-local).
-``skipper_match``        — full-graph driver: host-side windowing (the
-    locality phase of the paper's scheduler), per-window kernel launches, and
-    a pure-jnp cross-window cleanup pass for boundary edges. Every edge is
-    still decided exactly once.
+``skipper_match``        — full-graph driver, device-resident: a one-shot host
+    precompute (``graphs/windows.build_window_schedule``) packs the canonical
+    edge stream into a static ``[num_windows, tiles_per_window, tile_size]``
+    schedule, then ONE traced function covers the whole graph: a single
+    ``pallas_call`` over the 2-D (window, tile) grid — the vertex-state block
+    revolves through VMEM per window, no host round-trips — followed by an
+    in-device first-claim epilogue (``core/engine.tile_pass``) that resolves
+    cross-window boundary edges against the full state. Every edge is still
+    decided exactly once; Counters are computed on device.
+
+``interpret`` is a debug flag: ``None`` (default) resolves to False on TPU
+(compiled Mosaic) and True elsewhere (Pallas' interpreter is the only Pallas
+path on CPU). ``backend="xla"`` selects the jnp twin of the same schedule —
+one compilation unit, identical semantics — which is what CPU benchmarks time
+(see benchmarks/kernel_bench.py).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional, Tuple, Union
 
-import numpy as np
+import functools
+
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
+from repro.core.types import STATE_DTYPE, Counters, MatchResult
 from repro.graphs.types import EdgeList
-from repro.core.types import ACC, MCHD, STATE_DTYPE, Counters, MatchResult
-from repro.kernels.skipper_match.kernel import build_window_matcher
+from repro.graphs.windows import WindowSchedule, build_window_schedule
+from repro.kernels.skipper_match.kernel import (
+    build_pipeline_matcher,
+    build_window_matcher,
+)
+from repro.kernels.skipper_match.ref import make_ref_pipeline
+
+# Incremented at TRACE time inside the pipeline body: the number of actual
+# compilations of the full-graph pipeline. Tests use it to prove the driver
+# performs zero per-window host round-trips (one trace covers all windows).
+_PIPELINE_TRACES = 0
+
+
+def pipeline_trace_count() -> int:
+    return _PIPELINE_TRACES
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
 
 
 def skipper_match_window(
@@ -26,11 +57,13 @@ def skipper_match_window(
     tile_size: int = 256,
     vector_rounds: int = 3,
     fallback: bool = True,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Match a window-local edge stream. u/v: int32[M] (padded to tile
     multiple with -1), state0: int32[W]. Returns (state, matched, conflicts).
     """
+    if interpret is None:
+        interpret = _auto_interpret()
     m = u.shape[0]
     pad = (-m) % tile_size
     if pad:
@@ -45,78 +78,134 @@ def skipper_match_window(
     return state, matched[:m], conflicts[:m]
 
 
+@functools.lru_cache(maxsize=64)
+def _build_pipeline(
+    num_windows: int,
+    tiles_per_window: int,
+    tile_size: int,
+    window: int,
+    num_boundary_padded: int,
+    num_edges: int,
+    num_vertices: int,
+    vector_rounds: int,
+    interpret: bool,
+    backend: str,
+):
+    """One jitted compilation unit per static schedule shape: windowed kernel
+    sweep + boundary epilogue + on-device counters."""
+    n_flat = num_windows * window
+    nb_tiles = num_boundary_padded // tile_size
+    m = num_edges
+
+    def pipeline(u2, v2, eidx, bu, bv, bidx):
+        global _PIPELINE_TRACES
+        _PIPELINE_TRACES += 1  # trace-time side effect (compilation counter)
+
+        if backend == "pallas":
+            call = build_pipeline_matcher(
+                num_windows, tiles_per_window, tile_size, window,
+                vector_rounds, True, interpret,
+            )
+            state0 = jnp.zeros((num_windows, window), jnp.int32)
+            state2, matched2, conf2 = call(u2, v2, state0)
+        else:  # "xla": the jnp twin of the identical schedule
+            run = make_ref_pipeline(window, vector_rounds)
+            state2, matched2, conf2 = run(
+                u2.reshape(num_windows, tiles_per_window, tile_size),
+                v2.reshape(num_windows, tiles_per_window, tile_size),
+            )
+
+        # Boundary epilogue: cross-window edges against the full flattened
+        # state, same first-claim tile pass, still inside this trace.
+        flat = state2.reshape(n_flat)
+        if nb_tiles:
+            but = bu.reshape(nb_tiles, tile_size)
+            bvt = bv.reshape(nb_tiles, tile_size)
+
+            def bstep(st, uv):
+                st, mt, cf, _fb = engine.tile_pass(
+                    st, uv[0], uv[1], n=n_flat, vector_rounds=vector_rounds
+                )
+                return st, (mt, cf)
+
+            flat, (bmt, bcf) = jax.lax.scan(bstep, flat, (but, bvt))
+
+        # Scatter slot-order decisions back to stream order. Padding slots
+        # carry edge_index == -1 -> routed to the extra slot m and sliced off.
+        mask = jnp.zeros((m + 1,), jnp.bool_)
+        conf = jnp.zeros((m + 1,), jnp.int32)
+        wi = jnp.where(eidx.reshape(-1) >= 0, eidx.reshape(-1), m)
+        mask = mask.at[wi].set(matched2.reshape(-1).astype(jnp.bool_))
+        conf = conf.at[wi].set(conf2.reshape(-1))
+        if nb_tiles:
+            bwi = jnp.where(bidx >= 0, bidx, m)
+            mask = mask.at[bwi].set(bmt.reshape(-1))
+            conf = conf.at[bwi].set(bcf.reshape(-1))
+        mask = mask[:m]
+        conf = conf[:m]
+
+        nmatch = jnp.sum(mask).astype(jnp.int32)
+        nconf = jnp.sum(conf).astype(jnp.int32)
+        counters = Counters(
+            edge_reads=jnp.asarray(m, jnp.int32),
+            state_loads=jnp.asarray(2 * m, jnp.int32) + 2 * nconf,
+            state_stores=2 * nmatch,
+            rounds=jnp.asarray(1, jnp.int32),
+        )
+        state_out = flat[:num_vertices].astype(STATE_DTYPE)
+        return mask, state_out, conf, counters
+
+    return jax.jit(pipeline)
+
+
 def skipper_match(
-    edges: EdgeList,
+    edges: Optional[EdgeList] = None,
     window: int = 2048,
     tile_size: int = 256,
     vector_rounds: int = 3,
-    interpret: bool = True,
-) -> MatchResult:
-    """Full-graph matcher: kernel on intra-window edges, jnp pass on the rest.
+    interpret: Optional[bool] = None,
+    backend: str = "pallas",
+    schedule: Optional[WindowSchedule] = None,
+    dispersed: bool = True,
+    with_conflicts: bool = False,
+) -> Union[MatchResult, Tuple[MatchResult, jax.Array]]:
+    """Full-graph device-resident matcher: one traced pipeline for all
+    windows plus the in-device boundary epilogue.
 
-    Host-side bucketing is the locality phase: vertex id space is cut into
-    windows of ``window`` ids; intra-window edges run through the VMEM kernel
-    (the common case for locality-ordered graphs), boundary edges go through
-    the exact sequential cleanup. Single pass per edge overall.
+    Pass ``schedule`` (from ``build_window_schedule``) to skip the host
+    precompute — e.g. when timing the compiled device path; ``window`` /
+    ``tile_size`` / ``dispersed`` are then taken from the schedule. The
+    result's mask/conflicts are aligned with the original edge stream order.
     """
-    n = edges.num_vertices
-    e = edges.canonical()
-    u_np = np.asarray(e.u)
-    v_np = np.asarray(e.v)
-    m = u_np.shape[0]
-    valid = (u_np >= 0) & (u_np != v_np)
-    wu = u_np // window
-    wv = v_np // window
-    intra = valid & (wu == wv)
-    num_windows = (n + window - 1) // window
-
-    state = np.full((num_windows * window,), int(ACC), np.int32)
-    matched = np.zeros((m,), bool)
-    conflicts = np.zeros((m,), np.int32)
-
-    # Phase 1: per-window kernel launches (independent subproblems — on a real
-    # deployment these are the per-core shards; here they run sequentially).
-    for w in range(num_windows):
-        sel = np.nonzero(intra & (wu == w))[0]
-        if sel.size == 0:
-            continue
-        base = w * window
-        lu = jnp.asarray(u_np[sel] - base, jnp.int32)
-        lv = jnp.asarray(v_np[sel] - base, jnp.int32)
-        st0 = jnp.asarray(state[base : base + window])
-        st, mt, cf = skipper_match_window(
-            lu, lv, st0, tile_size, vector_rounds, True, interpret
-        )
-        state[base : base + window] = np.asarray(st)
-        matched[sel] = np.asarray(mt).astype(bool)
-        conflicts[sel] = np.asarray(cf)
-
-    # Phase 2: boundary edges — exact sequential greedy against global state.
-    sel = np.nonzero(valid & ~intra)[0]
-    if sel.size:
-        st = jnp.asarray(state[:n])
-
-        def fstep(stt, uv):
-            uu, vv = uv
-            take = (stt[uu] == ACC) & (stt[vv] == ACC)
-            stt = stt.at[jnp.where(take, uu, n)].set(MCHD, mode="drop")
-            stt = stt.at[jnp.where(take, vv, n)].set(MCHD, mode="drop")
-            return stt, take
-
-        st, takes = jax.lax.scan(
-            fstep, st, (jnp.asarray(u_np[sel]), jnp.asarray(v_np[sel]))
-        )
-        state[:n] = np.asarray(st)
-        matched[sel] = np.asarray(takes)
-
-    counters = Counters(
-        edge_reads=jnp.asarray(m, jnp.int32),
-        state_loads=jnp.asarray(2 * m + 2 * int(conflicts.sum()), jnp.int32),
-        state_stores=jnp.asarray(2 * int(matched.sum()), jnp.int32),
-        rounds=jnp.asarray(1, jnp.int32),
+    if backend not in ("pallas", "xla"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if schedule is None:
+        if edges is None:
+            raise ValueError("need either edges or a prebuilt schedule")
+        schedule = build_window_schedule(edges, window, tile_size, dispersed)
+    if interpret is None:
+        interpret = _auto_interpret()
+    fn = _build_pipeline(
+        schedule.num_windows,
+        schedule.tiles_per_window,
+        schedule.tile_size,
+        schedule.window,
+        schedule.num_boundary_padded,
+        schedule.num_edges,
+        schedule.num_vertices,
+        vector_rounds,
+        bool(interpret),
+        backend,
     )
-    return MatchResult(
-        match_mask=jnp.asarray(matched),
-        state=jnp.asarray(state[:n], STATE_DTYPE),
-        counters=counters,
+    mask, state, conflicts, counters = fn(
+        jnp.asarray(schedule.u_tiles),
+        jnp.asarray(schedule.v_tiles),
+        jnp.asarray(schedule.edge_index),
+        jnp.asarray(schedule.boundary_u),
+        jnp.asarray(schedule.boundary_v),
+        jnp.asarray(schedule.boundary_index),
     )
+    result = MatchResult(match_mask=mask, state=state, counters=counters)
+    if with_conflicts:
+        return result, conflicts
+    return result

@@ -1,9 +1,15 @@
-"""Pure-jnp oracle for the skipper_match kernel.
+"""Pure-jnp oracle for the skipper_match kernels.
 
-Implements *bit-identical* semantics to kernel.skipper_window_kernel (same
-tile order, same vector rounds, same first-claim rule, same fallback), so
-tests can assert exact equality of the matched mask and final state, plus the
-algorithm-level properties (validity, maximality) against core.sgmm.
+Implements *bit-identical* semantics to ``kernel.skipper_window_kernel`` /
+``kernel.skipper_pipeline_kernel`` (same tile order, same vector rounds, same
+first-claim rule, same fallback), so tests can assert exact equality of the
+matched mask and final state, plus the algorithm-level properties (validity,
+maximality) against core.sgmm.
+
+Both the kernel and this oracle consume ``core/engine.py`` for the conflict
+matrix and commit rule; only the gather/scatter differs (MXU one-hot matmuls
+there, ``.at`` indexing here), which is exactly the part exact-equality tests
+pin down.
 """
 from __future__ import annotations
 
@@ -13,8 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-ACC = 0
-MCHD = 2
+from repro.core import engine
 
 
 @partial(jax.jit, static_argnames=("vector_rounds", "fallback"))
@@ -27,55 +32,38 @@ def ref_match_window(
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Returns (state, matched int32[num_tiles*T], conflicts int32[...])."""
     w = state0.shape[0]
-    t = u_tiles.shape[1]
 
     def tile_step(state, uv):
         u, v = uv
-        valid = (u >= 0) & (u != v)
-        share = (
-            (u[:, None] == u[None, :])
-            | (u[:, None] == v[None, :])
-            | (v[:, None] == u[None, :])
-            | (v[:, None] == v[None, :])
+        state, matched, conflicts, _fb = engine.tile_pass(
+            state, u, v, n=w, vector_rounds=vector_rounds, fallback=fallback
         )
-        lower = jnp.tril(jnp.ones((t, t), jnp.bool_), k=-1)
-        conflict = share & lower & valid[None, :] & valid[:, None]
-
-        matched = jnp.zeros((t,), jnp.bool_)
-        conflicts = jnp.zeros((t,), jnp.int32)
-        for _ in range(vector_rounds):
-            su = state[jnp.where(valid, u, 0)]
-            sv = state[jnp.where(valid, v, 0)]
-            free = valid & (~matched) & (su == ACC) & (sv == ACC)
-            blocked = jnp.any(conflict & free[None, :], axis=1) & free
-            commit = free & ~blocked
-            state = state.at[jnp.where(commit, u, w)].set(MCHD, mode="drop")
-            state = state.at[jnp.where(commit, v, w)].set(MCHD, mode="drop")
-            matched = matched | commit
-            conflicts = conflicts + blocked.astype(jnp.int32)
-
-        if fallback:
-            su = state[jnp.where(valid, u, 0)]
-            sv = state[jnp.where(valid, v, 0)]
-            remaining = valid & (~matched) & (su == ACC) & (sv == ACC)
-
-            def body(i, carry):
-                state, matched = carry
-                rem_i = remaining[i]
-                ui = u[i]
-                vi = v[i]
-                s_u = state[jnp.where(rem_i, ui, 0)]
-                s_v = state[jnp.where(rem_i, vi, 0)]
-                take = rem_i & (s_u == ACC) & (s_v == ACC)
-                state = jnp.where(
-                    take, state.at[ui].set(MCHD).at[vi].set(MCHD), state
-                )
-                matched = matched.at[i].set(matched[i] | take)
-                return state, matched
-
-            state, matched = jax.lax.fori_loop(0, t, body, (state, matched))
-
         return state, (matched.astype(jnp.int32), conflicts)
 
     state, (matched, conflicts) = jax.lax.scan(tile_step, state0, (u_tiles, v_tiles))
     return state, matched.reshape(-1), conflicts.reshape(-1)
+
+
+def make_ref_pipeline(window: int, vector_rounds: int = 3):
+    """Build the jnp twin of ``build_pipeline_matcher`` for a fixed window
+    size: every window starts from all-ACC state and runs its tiles in order.
+    Windows are independent, so they vectorize with vmap (the XLA analogue of
+    the revolving VMEM block). The returned callable maps
+    (u_tiles, v_tiles) int32[num_windows, tiles_per_window, T] (local ids) to
+    (state int32[nw, window], matched int32[nw, tpw*T], conflicts int32[...]).
+    """
+
+    def one_window(u_t, v_t):  # [tiles_per_window, T] local ids
+        state0 = jnp.zeros((window,), jnp.int32)
+
+        def tile_step(state, uv):
+            u, v = uv
+            state, matched, conflicts, _fb = engine.tile_pass(
+                state, u, v, n=window, vector_rounds=vector_rounds
+            )
+            return state, (matched.astype(jnp.int32), conflicts)
+
+        state, (matched, conflicts) = jax.lax.scan(tile_step, state0, (u_t, v_t))
+        return state, matched.reshape(-1), conflicts.reshape(-1)
+
+    return jax.vmap(one_window)

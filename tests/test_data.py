@@ -1,5 +1,8 @@
 """Data pipeline: determinism, sharding disjointness, matching-based packing."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data import (

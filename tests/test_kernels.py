@@ -47,6 +47,25 @@ def test_skipper_kernel_full_graph(gname, g):
     assert out["num_matches"] >= ms / 2
 
 
+def test_skipper_kernel_matches_ref_without_fallback():
+    """Oracle honors fallback=False exactly like the kernel (a dependency
+    chain that only the sequential fallback would finish stays unmatched)."""
+    u = np.array([0, 1, 2, -1], np.int32)
+    v = np.array([1, 2, 3, -1], np.int32)
+    st0 = jnp.zeros((8,), jnp.int32)
+    s1, m1, c1 = skipper_match_window(
+        jnp.asarray(u), jnp.asarray(v), st0, tile_size=4,
+        vector_rounds=1, fallback=False,
+    )
+    s2, m2, c2 = ref_match_window(
+        jnp.asarray(u).reshape(1, 4), jnp.asarray(v).reshape(1, 4), st0,
+        vector_rounds=1, fallback=False,
+    )
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
 def test_skipper_kernel_empty_and_selfloops():
     import jax.numpy as jnp
     from repro.graphs.types import EdgeList

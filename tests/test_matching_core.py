@@ -6,6 +6,8 @@ drives random graph instances at the system-invariant level.
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

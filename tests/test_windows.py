@@ -1,0 +1,152 @@
+"""Device-resident window pipeline: schedule correctness, matching
+properties across generator families, backend equivalence, and the
+zero-host-round-trip guarantee (single trace covers all windows)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import assert_matching, skipper
+from repro.graphs import (
+    EdgeList, bipartite_graph, grid_graph, ring_graph, rmat_graph,
+    star_graph, build_window_schedule, contiguous_chunks,
+)
+from repro.kernels.skipper_match import skipper_match, pipeline_trace_count
+
+GRAPHS = {
+    "rmat": lambda: rmat_graph(10, 8, seed=3),
+    "grid": lambda: grid_graph(24, 24),
+    "ring": lambda: ring_graph(333),
+    "star": lambda: star_graph(200),
+    "bipartite": lambda: bipartite_graph(300, 200, 1500, seed=4),
+}
+
+
+# --------------------------------------------------- schedule invariants ---
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("window,tile", [(128, 64), (256, 128)])
+def test_schedule_partitions_stream(gname, window, tile):
+    """Every valid edge lands in exactly one slot (windowed or boundary);
+    local ids are in-range; padding is -1."""
+    g = GRAPHS[gname]()
+    s = build_window_schedule(g, window=window, tile_size=tile)
+    u = np.asarray(g.canonical().u)
+    v = np.asarray(g.canonical().v)
+    valid = (u >= 0) & (u != v)
+
+    widx = s.edge_index[s.edge_index >= 0]
+    bidx = s.boundary_index[s.boundary_index >= 0]
+    both = np.concatenate([widx, bidx])
+    assert len(both) == len(set(both.tolist())), "edge scheduled twice"
+    np.testing.assert_array_equal(np.sort(both), np.nonzero(valid)[0])
+
+    present = s.edge_index >= 0
+    assert np.all(s.u_tiles[present] >= 0) and np.all(s.u_tiles[present] < window)
+    assert np.all(s.v_tiles[present] >= 0) and np.all(s.v_tiles[present] < window)
+    assert np.all(s.u_tiles[~present] == -1) and np.all(s.v_tiles[~present] == -1)
+    # slot local ids reconstruct the original global endpoints
+    wrow = np.repeat(np.arange(s.num_windows), s.tiles_per_window * s.tile_size).reshape(
+        s.num_windows, -1
+    )
+    np.testing.assert_array_equal(
+        s.u_tiles[present] + wrow[present] * window, u[s.edge_index[present]]
+    )
+    np.testing.assert_array_equal(
+        s.v_tiles[present] + wrow[present] * window, v[s.edge_index[present]]
+    )
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_schedule_index_roundtrip(gname):
+    """stream position <-> (window, tile, lane) round-trips exactly."""
+    g = GRAPHS[gname]()
+    s = build_window_schedule(g, window=128, tile_size=64)
+    s2s = s.slot_to_stream()                 # [W, T, L] -> stream
+    inv = s.stream_to_slot()                 # stream -> (w, t, l)
+    w, t, l = np.nonzero(s2s >= 0)
+    np.testing.assert_array_equal(inv[s2s[w, t, l]], np.stack([w, t, l], axis=1))
+    # and the reverse: every scheduled stream position points back at its slot
+    k = np.nonzero(inv[:, 0] >= 0)[0]
+    wk, tk, lk = inv[k, 0], inv[k, 1], inv[k, 2]
+    np.testing.assert_array_equal(s2s[wk, tk, lk], k)
+
+
+def test_dispersed_deal_within_window():
+    """Lane l of tile t holds window-stream slot l * tiles_per_window + t."""
+    g = ring_graph(256)  # one window, edges in stream order
+    s = build_window_schedule(g, window=256, tile_size=64)
+    assert s.num_windows == 1
+    s2s = s.slot_to_stream()[0]  # [tiles, lanes]
+    tiles = s.tiles_per_window
+    for t in range(tiles):
+        for l in range(0, 64, 17):
+            want = l * tiles + t
+            got = s2s[t, l]
+            if want < s.num_edges:
+                assert got == want
+            else:
+                assert got == -1
+
+
+# ------------------------------------------------- matching properties ----
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("window,tile", [(128, 64), (256, 128), (512, 64)])
+def test_pipeline_valid_maximal_all_families(gname, window, tile):
+    g = GRAPHS[gname]()
+    res = skipper_match(g, window=window, tile_size=tile, backend="xla")
+    out = assert_matching(g, res.match_mask, f"pipeline/{gname}/w{window}t{tile}")
+    # any two maximal matchings are within 2x of each other
+    ref, _ = skipper(g, tile_size=128)
+    nref = int(ref.num_matches)
+    assert nref / 2 <= out["num_matches"] <= 2 * nref
+
+
+@pytest.mark.parametrize("gname", ["grid", "rmat", "star"])
+def test_pipeline_pallas_interpret_matches_xla_exactly(gname):
+    """The Pallas path (interpret) and its jnp twin are bit-identical."""
+    g = GRAPHS[gname]()
+    s = build_window_schedule(g, window=128, tile_size=64)
+    r_x = skipper_match(schedule=s, backend="xla")
+    r_p = skipper_match(schedule=s, backend="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(r_x.match_mask), np.asarray(r_p.match_mask))
+    np.testing.assert_array_equal(np.asarray(r_x.state), np.asarray(r_p.state))
+
+
+def test_pipeline_counters_on_device():
+    g = grid_graph(20, 20)
+    res = skipper_match(g, window=128, tile_size=64, backend="xla")
+    m = g.canonical().num_edges
+    assert int(res.counters.edge_reads) == m
+    assert int(res.counters.state_stores) == 2 * int(res.num_matches)
+    assert int(res.counters.state_loads) >= 2 * m
+
+
+# ------------------------------------------------ single-trace guarantee ---
+def test_pipeline_single_trace_covers_all_windows():
+    """Zero per-window host round-trips: one pipeline compilation regardless
+    of window count, and repeated calls with the same static shapes do not
+    retrace."""
+    g = grid_graph(40, 40)  # 1600 vertices -> 13 windows of 128
+    s = build_window_schedule(g, window=128, tile_size=64)
+    assert s.num_windows > 8
+    before = pipeline_trace_count()
+    skipper_match(schedule=s, backend="xla", vector_rounds=2)
+    after_first = pipeline_trace_count()
+    assert after_first == before + 1, "expected exactly ONE trace for all windows"
+    skipper_match(schedule=s, backend="xla", vector_rounds=2)
+    assert pipeline_trace_count() == after_first, "retraced on identical shapes"
+
+
+# ------------------------------------------------------ partition fix -----
+def test_contiguous_chunks_returns_device_arrays():
+    g = ring_graph(100)
+    u, v = contiguous_chunks(g, 4)
+    assert isinstance(u, jnp.ndarray) and isinstance(v, jnp.ndarray)
+    assert u.shape == v.shape == (4, 25)
+    np.testing.assert_array_equal(np.asarray(u).reshape(-1), np.asarray(g.u))
+
+
+def test_contiguous_chunks_pads_with_invalid():
+    g = EdgeList(jnp.asarray([0, 1, 2], jnp.int32), jnp.asarray([1, 2, 3], jnp.int32), 4)
+    u, v = contiguous_chunks(g, 2)
+    assert u.shape == (2, 2)
+    assert int(u[-1, -1]) == -1 and int(v[-1, -1]) == -1
