@@ -1,0 +1,87 @@
+"""Bench-smoke regression gate (CI).
+
+Compares a freshly recorded kernel_bench JSON against the committed baseline
+and fails if any ``kernel/windowed_pipeline*`` row regressed beyond the
+tolerance.
+
+CI runners and the recording machine differ in absolute speed, so raw
+``us_per_call`` comparisons are meaningless across hosts. Each windowed row
+is therefore NORMALIZED by the same run's ``kernel/jnp_matcher`` row for the
+same graph (both matchers share the engine, so host speed cancels):
+
+    ratio(run, graph) = us(windowed_pipeline/graph) / us(jnp_matcher/graph)
+
+and the gate is ``ratio_new <= ratio_baseline * (1 + tolerance)``.
+
+Usage:
+    python benchmarks/check_regression.py new.json baseline.json [--tolerance 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# gated rows; the _noreorder twin is reported but not gated (it exists for
+# the trajectory, and flakes more: no reorder => epilogue-dominated timing)
+PREFIXES = ("kernel/windowed_pipeline/",)
+INFO_PREFIXES = ("kernel/windowed_pipeline_noreorder/",)
+NORM = "kernel/jnp_matcher/"
+
+
+def _ratios(data: dict, prefixes=PREFIXES) -> dict:
+    out = {}
+    for name, row in data.items():
+        for prefix in prefixes:
+            if name.startswith(prefix):
+                graph = name[len(prefix):]
+                norm = data.get(NORM + graph)
+                if norm is None:
+                    continue
+                out[name] = row["us_per_call"] / norm["us_per_call"]
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new_json")
+    ap.add_argument("baseline_json")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed relative slowdown of the jnp-normalized ratio")
+    args = ap.parse_args()
+
+    with open(args.new_json) as f:
+        new_data = json.load(f)
+    with open(args.baseline_json) as f:
+        base_data = json.load(f)
+    new = _ratios(new_data)
+    base = _ratios(base_data)
+
+    for name, r in sorted(_ratios(new_data, INFO_PREFIXES).items()):
+        b = _ratios(base_data, INFO_PREFIXES).get(name)
+        print(f"{name}: ratio {r:.3f} vs baseline "
+              f"{'%.3f' % b if b is not None else 'n/a'} (informational)")
+
+    failed = []
+    for name, r_base in sorted(base.items()):
+        r_new = new.get(name)
+        if r_new is None:
+            failed.append(f"{name}: missing from new run")
+            continue
+        limit = r_base * (1.0 + args.tolerance)
+        verdict = "FAIL" if r_new > limit else "ok"
+        print(f"{name}: ratio {r_new:.3f} vs baseline {r_base:.3f} "
+              f"(limit {limit:.3f}) {verdict}")
+        if r_new > limit:
+            failed.append(f"{name}: {r_new:.3f} > {limit:.3f}")
+    if not base:
+        print("no windowed_pipeline rows in baseline — nothing to check")
+    if failed:
+        print("\nregressions:\n  " + "\n  ".join(failed))
+        return 1
+    print("\nno windowed_pipeline regression beyond tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

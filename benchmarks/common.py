@@ -36,7 +36,9 @@ def graph_suite(scale: str = "small") -> Dict[str, EdgeList]:
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall time (seconds) of a jit'd call, post-warmup."""
+    """Median wall time (seconds) of a jit'd call, post-warmup. (The
+    regression-gated windowed rows don't use this reduction: kernel_bench
+    interleaves its cells and takes per-cell minima — see _bench_windowed.)"""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []

@@ -22,6 +22,9 @@ def main() -> None:
     ap.add_argument("--matcher", default="both", choices=["both", "jnp", "windowed"],
                     help="which matcher path kernel_bench times "
                          "(jnp tiled vs device-resident windowed pipeline)")
+    ap.add_argument("--reorder", default="degree",
+                    choices=["none", "degree", "bfs", "greedy"],
+                    help="locality reordering for the windowed schedule")
     args = ap.parse_args()
 
     from benchmarks import (
@@ -44,7 +47,7 @@ def main() -> None:
             continue
         try:
             if name == "kernels":
-                mod.run(args.scale, matcher=args.matcher)
+                mod.run(args.scale, matcher=args.matcher, reorder=args.reorder)
             else:
                 mod.run(args.scale)
         except Exception as e:

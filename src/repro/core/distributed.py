@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
 from repro.core.types import ACC, MCHD, STATE_DTYPE, Counters, MatchResult
 from repro.core.engine import tile_pass
 from repro.graphs.types import EdgeList
@@ -218,10 +219,7 @@ def distributed_skipper(
     """
     if mesh is None:
         devs = jax.devices()
-        mesh = jax.make_mesh(
-            (len(devs),), (axis_name,),
-            axis_types=(jax.sharding.AxisType.Auto,),
-        )
+        mesh = compat.make_mesh((len(devs),), (axis_name,))
     if isinstance(mesh.shape, dict):
         num_devices = mesh.shape[axis_name]
     else:  # pragma: no cover
@@ -249,7 +247,7 @@ def distributed_skipper(
         tile_size=tile_size,
         drain_rounds=drain_rounds,
     )
-    shard = jax.shard_map(
+    shard = compat.shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(axis_name), P(axis_name), P(axis_name)),

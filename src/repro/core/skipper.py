@@ -67,7 +67,7 @@ __all__ = ["skipper", "tile_pass"]
 def skipper(
     edges: EdgeList,
     tile_size: int = 512,
-    vector_rounds: int = 3,
+    vector_rounds: int = 1,
     with_conflicts: bool = False,
     dispersed: bool = True,
 ) -> Tuple[MatchResult, Optional[jax.Array]]:

@@ -18,6 +18,11 @@ from repro.graphs.generators import (
 )
 from repro.graphs.csr import edges_to_csr, symmetrize, dedup_edges
 from repro.graphs.partition import dispersed_blocks, pad_edges, contiguous_chunks
+from repro.graphs.reorder import (
+    Reordering,
+    intra_window_fraction,
+    reorder_vertices,
+)
 from repro.graphs.windows import WindowSchedule, build_window_schedule
 
 __all__ = [
@@ -36,6 +41,9 @@ __all__ = [
     "dispersed_blocks",
     "pad_edges",
     "contiguous_chunks",
+    "Reordering",
+    "reorder_vertices",
+    "intra_window_fraction",
     "WindowSchedule",
     "build_window_schedule",
 ]

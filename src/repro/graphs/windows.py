@@ -5,40 +5,54 @@ ids and buckets canonical edges by window so the hot loop only ever touches a
 VMEM-sized slice of the state array. The old driver re-derived this per window
 on the host, with a numpy round-trip between Pallas launches; this module
 computes the *whole* schedule once, with static shapes, so the kernel driver
-traces a single ``pallas_call`` over a 2-D ``(window, tile)`` grid and never
+traces a single ``pallas_call`` over a 2-D ``(row, tile)`` grid and never
 returns to the host mid-graph.
+
+Two refinements over the naive bucketing (DESIGN.md §2 A7, §8):
+
+* **Locality reordering** (``reorder=``): vertices are renumbered by a
+  ``graphs/reorder.py`` policy before bucketing, so permuted / power-law
+  inputs reach grid-like intra-window fractions. The schedule carries the
+  permutation (``perm``/``inv``); the driver maps results back to original
+  ids, so callers never see renumbered vertices.
+* **Two-tier schedule** (``coalesce_sparse=``): ``tiles_per_window`` is a
+  static max, so skewed graphs used to pay padding for every window. Now
+  only *dense* windows (tile occupancy >= ``sparse_occupancy`` of the
+  densest window's row) get rows in the 2-D grid; sparse windows are
+  coalesced into the global stream next to the cross-window edges and
+  resolved by the boundary epilogue against the full state — batched tiles,
+  zero per-window padding. ``window_ids`` maps schedule rows back to window
+  ids (rows are compacted).
 
 Layout (see DESIGN.md "Window-schedule layout"):
 
-    u_tiles / v_tiles : int32[num_windows, tiles_per_window * tile_size]
-        window-LOCAL endpoint ids (global id minus window * window_size),
-        -1 padding. Row w, flattened slot t * tile_size + l is tile t, lane l
-        of window w.
+    u_tiles / v_tiles : int32[num_rows, tiles_per_window * tile_size]
+        window-LOCAL endpoint ids (renumbered-global id minus
+        window_ids[row] * window), -1 padding. Row r, flattened slot
+        t * tile_size + l is tile t, lane l of window window_ids[r].
     edge_index        : same shape; original stream index of the edge in that
         slot (-1 for padding). This is the slot -> stream half of the
         round-trip mapping; ``stream_to_slot`` computes the inverse.
-    boundary_u/v/index: int32[num_boundary_padded] cross-window edges in
-        stream order (GLOBAL ids), padded to a tile multiple; resolved by the
-        in-device epilogue against the full state.
+    boundary_u/v/index: int32[num_boundary_padded] global-tier edges in
+        stream order (renumbered GLOBAL ids), padded to a tile multiple:
+        cross-window edges plus the edges of coalesced sparse windows;
+        resolved by the in-device epilogue against the full state.
 
 The dispersed deal (paper §IV-C) is applied *within* each window: lane l of
 the window's tile stream walks its own contiguous run of that window's edges
 (locality preserved per lane) while the lanes of any one tile sit far apart
 in the window's stream (dispersed), keeping intra-tile endpoint sharing — the
 JIT-conflict source — Θ(λ²)-rare.
-
-``tiles_per_window`` is the max over windows (static shapes are the price of
-a single compilation unit); skewed graphs pay padding for it — see DESIGN.md
-§2 A7 for the accounting.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional
 
 import numpy as np
 
 from repro.graphs.types import EdgeList
+from repro.graphs.reorder import Reordering, reorder_vertices
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,31 +62,77 @@ class WindowSchedule:
 
     window: int           # vertex ids per window
     tile_size: int
-    num_windows: int
+    num_windows: int      # windows covering the id space (state rows)
     tiles_per_window: int
     num_vertices: int
     num_edges: int        # original stream length (mask/conflicts length)
-    u_tiles: np.ndarray   # int32[num_windows, tiles_per_window * tile_size], local ids
+    u_tiles: np.ndarray   # int32[num_rows, tiles_per_window * tile_size], local ids
     v_tiles: np.ndarray
     edge_index: np.ndarray  # int32, same shape, stream index or -1
     boundary_u: np.ndarray  # int32[num_boundary_padded], global ids
     boundary_v: np.ndarray
     boundary_index: np.ndarray
+    # two-tier bookkeeping: schedule row r holds window window_ids[r]
+    window_ids: np.ndarray = None  # int32[num_rows], default arange
+    # locality reordering (None = identity / not reordered)
+    reorder: str = "none"
+    perm: Optional[np.ndarray] = None   # int32[n]: original id -> renumbered id
+    inv: Optional[np.ndarray] = None    # int32[n]: renumbered id -> original id
+    # measured locality/packing stats (set by build_window_schedule)
+    num_valid: int = 0     # valid edges in the stream
+    num_intra: int = 0     # valid edges with both endpoints in one window
+    num_windowed: int = 0  # edges placed in the dense (2-D grid) tier
+    # stream_src[k] = flat decision-slot index of stream position k in
+    # [windowed slots ++ global-tier slots ++ one always-zero pad slot] —
+    # lets the driver GATHER decisions back to stream order (a device
+    # scatter of |E| indices costs ~100x more than the gather on CPU XLA).
+    stream_src: Optional[np.ndarray] = None  # int32[num_edges]
+
+    def __post_init__(self):
+        if self.window_ids is None:
+            object.__setattr__(
+                self, "window_ids", np.arange(self.num_rows, dtype=np.int32)
+            )
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.u_tiles.shape[0])
 
     @property
     def num_boundary_padded(self) -> int:
         return int(self.boundary_u.shape[0])
 
+    @property
+    def intra_fraction(self) -> float:
+        """Fraction of valid edges intra-window after reordering — the
+        locality number the benches report."""
+        return self.num_intra / max(1, self.num_valid)
+
+    @property
+    def windowed_fraction(self) -> float:
+        """Fraction of valid edges resolved in the dense VMEM-resident tier
+        (<= intra_fraction: sparse windows are coalesced into the global
+        tier)."""
+        return self.num_windowed / max(1, self.num_valid)
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of scheduled slots (both tiers) that are padding."""
+        total = self.num_rows * self.tiles_per_window * self.tile_size
+        total += self.num_boundary_padded
+        used = self.num_windowed + int((self.boundary_index >= 0).sum())
+        return (total - used) / max(1, total)
+
     def slot_to_stream(self) -> np.ndarray:
-        """int32[num_windows, tiles_per_window, tile_size] — stream index of
+        """int32[num_rows, tiles_per_window, tile_size] — stream index of
         each schedule slot (-1 = padding)."""
         return self.edge_index.reshape(
-            self.num_windows, self.tiles_per_window, self.tile_size
+            self.num_rows, self.tiles_per_window, self.tile_size
         )
 
     def stream_to_slot(self) -> np.ndarray:
-        """int32[num_edges, 3] — (window, tile, lane) of each stream position,
-        or (-1, -1, -1) for edges not in the windowed schedule (boundary /
+        """int32[num_edges, 3] — (row, tile, lane) of each stream position,
+        or (-1, -1, -1) for edges not in the windowed tier (global-tier /
         invalid edges)."""
         out = np.full((self.num_edges, 3), -1, np.int32)
         s2s = self.slot_to_stream()
@@ -93,41 +153,88 @@ def build_window_schedule(
     window: int = 2048,
     tile_size: int = 256,
     dispersed: bool = True,
+    reorder: str = "none",
+    reordering: Optional[Reordering] = None,
+    coalesce_sparse: bool = True,
+    sparse_occupancy: float = 0.25,
 ) -> WindowSchedule:
-    """Bucket canonical edges by vertex window and pack the dense schedule.
+    """Bucket canonical edges by vertex window and pack the two-tier schedule.
 
-    Pure host/numpy, one pass over the edge list; every output shape depends
-    only on (graph, window, tile_size) so the device driver traces once.
+    Pure host/numpy, one pass over the edge list (plus the optional
+    reordering pass); every output shape depends only on (graph, window,
+    tile_size, reorder policy) so the device driver traces once.
+
+    ``reorder`` names a ``graphs/reorder.py`` policy (or pass a precomputed
+    ``reordering``); ``coalesce_sparse`` routes windows whose row occupancy
+    would be below ``sparse_occupancy`` (relative to the densest window's
+    padded row) into the global tier instead of padding them.
     """
     n = edges.num_vertices
     e = edges.canonical()
-    u = np.asarray(e.u)
-    v = np.asarray(e.v)
+    u = np.asarray(e.u).astype(np.int64)
+    v = np.asarray(e.v).astype(np.int64)
     m = int(u.shape[0])
-
     valid = (u >= 0) & (u != v)
+
+    if reordering is None and reorder != "none":
+        reordering = reorder_vertices(edges, reorder, window=window)
+    perm = inv = None
+    if reordering is not None and reordering.policy != "none":
+        perm = reordering.perm
+        inv = reordering.inv
+        reorder = reordering.policy
+        u = np.where(valid, perm[np.where(valid, u, 0)], u)
+        v = np.where(valid, perm[np.where(valid, v, 0)], v)
+    else:
+        reorder = "none"
+
     wu = np.where(valid, u // window, 0)
     wv = np.where(valid, v // window, 0)
     intra = valid & (wu == wv)
-    boundary = valid & ~intra
     num_windows = max(1, -(-n // window))
 
     counts = np.bincount(wu[intra], minlength=num_windows)
-    tiles_per_window = max(1, int(-(-counts.max() // tile_size))) if m else 1
+    max_count = int(counts.max()) if m else 0
+
+    # ---- two-tier split: dense windows get grid rows, sparse ones coalesce
+    if coalesce_sparse and num_windows > 1 and max_count > 0:
+        tiles_max = -(-max_count // tile_size)
+        occupancy = counts / (tiles_max * tile_size)
+        dense = occupancy >= sparse_occupancy
+        dense[np.argmax(counts)] = True     # densest window is always a row
+        dense &= counts > 0
+        if not dense.any():
+            dense = counts > 0
+    else:
+        dense = counts > 0 if max_count > 0 else np.zeros(num_windows, bool)
+        if not dense.any():
+            dense = np.ones(num_windows, bool)
+            dense[1:] = False
+    dense_ids = np.nonzero(dense)[0]
+    if dense_ids.size == 0:
+        dense_ids = np.array([0], np.int64)
+    num_rows = int(dense_ids.size)
+    dense_max = int(counts[dense_ids].max()) if m else 0
+    tiles_per_window = max(1, -(-dense_max // tile_size)) if m else 1
     slots = tiles_per_window * tile_size
 
-    u_tiles = np.full((num_windows, slots), -1, np.int32)
-    v_tiles = np.full((num_windows, slots), -1, np.int32)
-    edge_index = np.full((num_windows, slots), -1, np.int32)
+    coalesced = intra & ~dense[wu]          # sparse windows' edges
+    windowed = intra & dense[wu]
+    global_tier = valid & ~windowed         # boundary + coalesced, stream order
 
-    # stable bucket: edges of window w in stream order
-    order = np.nonzero(intra)[0]
+    u_tiles = np.full((num_rows, slots), -1, np.int32)
+    v_tiles = np.full((num_rows, slots), -1, np.int32)
+    edge_index = np.full((num_rows, slots), -1, np.int32)
+
+    # stable bucket: windowed edges of window w in stream order
+    order = np.nonzero(windowed)[0]
     win_of = wu[order]
     sort = np.argsort(win_of, kind="stable")
     order = order[sort]
-    starts = np.concatenate([[0], np.cumsum(counts)])
-    for w in range(num_windows):
-        sel = order[starts[w] : starts[w + 1]]
+    wcounts = counts * dense                # windowed edges per window
+    starts = np.concatenate([[0], np.cumsum(wcounts[dense_ids])])
+    for r, w in enumerate(dense_ids):
+        sel = order[starts[r] : starts[r + 1]]
         if sel.size == 0:
             continue
         pad = np.full((slots,), -1, np.int64)
@@ -137,11 +244,11 @@ def build_window_schedule(
         present = pad >= 0
         src = np.where(present, pad, 0)
         base = w * window
-        u_tiles[w] = np.where(present, u[src] - base, -1).astype(np.int32)
-        v_tiles[w] = np.where(present, v[src] - base, -1).astype(np.int32)
-        edge_index[w] = np.where(present, pad, -1).astype(np.int32)
+        u_tiles[r] = np.where(present, u[src] - base, -1).astype(np.int32)
+        v_tiles[r] = np.where(present, v[src] - base, -1).astype(np.int32)
+        edge_index[r] = np.where(present, pad, -1).astype(np.int32)
 
-    bsel = np.nonzero(boundary)[0]
+    bsel = np.nonzero(global_tier)[0]
     nb = int(bsel.size)
     nb_pad = -(-nb // tile_size) * tile_size if nb else 0
     boundary_u = np.full((nb_pad,), -1, np.int32)
@@ -150,6 +257,13 @@ def build_window_schedule(
     boundary_u[:nb] = u[bsel]
     boundary_v[:nb] = v[bsel]
     boundary_index[:nb] = bsel.astype(np.int32)
+
+    # stream -> decision-slot gather map (see WindowSchedule.stream_src)
+    slots_flat = num_rows * slots
+    stream_src = np.full((m,), slots_flat + nb_pad, np.int32)
+    rr, ss = np.nonzero(edge_index >= 0)
+    stream_src[edge_index[rr, ss]] = (rr * slots + ss).astype(np.int32)
+    stream_src[bsel] = (slots_flat + np.arange(nb)).astype(np.int32)
 
     return WindowSchedule(
         window=window,
@@ -164,4 +278,12 @@ def build_window_schedule(
         boundary_u=boundary_u,
         boundary_v=boundary_v,
         boundary_index=boundary_index,
+        window_ids=dense_ids.astype(np.int32),
+        reorder=reorder,
+        perm=perm,
+        inv=inv,
+        num_valid=int(valid.sum()),
+        num_intra=int(intra.sum()),
+        num_windowed=int(windowed.sum()),
+        stream_src=stream_src,
     )

@@ -1,16 +1,21 @@
 """Pallas TPU kernel: windowed single-pass greedy matching (Skipper core).
 
-TPU mapping of the paper's hot loop (Alg. 1 lines 5-18). Two entry points:
+TPU mapping of the paper's hot loop (Alg. 1 lines 5-18). Three entry points:
 
 * ``build_window_matcher``   — 1-D grid over the tiles of ONE vertex window
   (the unit-test / debugging surface).
-* ``build_pipeline_matcher`` — 2-D grid ``(window, tile)`` over the WHOLE
-  graph's window schedule (``graphs/windows.py``). The state BlockSpec index
-  map depends only on the window coordinate, so the W-vertex state block
-  stays resident in VMEM across all tile steps of a window and is swapped
-  (written back to HBM, next block DMA'd in) exactly once per window — zero
-  host round-trips for the full graph. TPU grids iterate the LAST dimension
-  innermost, which is what makes the residency work.
+* ``build_pipeline_matcher`` — 2-D grid ``(row, tile)`` over the dense tier
+  of the graph's window schedule (``graphs/windows.py``; a row is a dense
+  window). The state BlockSpec index map depends only on the row coordinate,
+  so the W-vertex state block stays resident in VMEM across all tile steps
+  of a window and is swapped (written back to HBM, next block DMA'd in)
+  exactly once per window — zero host round-trips for the full graph. TPU
+  grids iterate the LAST dimension innermost, which is what makes the
+  residency work.
+* ``build_boundary_matcher`` — 1-D grid over the global-tier tiles
+  (cross-window + coalesced sparse-window edges) with the FULL flattened
+  state VMEM-resident; the epilogue's decisions are ``engine.tile_pass``
+  verbatim, so the jnp reference epilogue stays bit-identical.
 
 Both wrap the same per-tile body. The first-claim decision logic (conflict
 matrix + commit rule) is ``core/engine.py`` — shared verbatim with the jnp
@@ -28,8 +33,9 @@ kernel-specific:
   * state scatter : commit vector folded back with one_hot transpose matmuls;
     committed edges are mutually endpoint-disjoint by construction, so the
     scatter is conflict-free (the kernel-level linearization point).
-  * fallback      : rare leftover chains resolved by a sequential fori_loop
-    over the tile (scalar path) — bounded, in-VMEM, still same-pass.
+  * fallback      : rare leftover chains resolved by iterated first-claim
+    rounds to fixpoint (``engine.greedy_fallback_rounds`` — exactly the
+    sequential greedy's result), all VPU/MXU work, in-VMEM, still same-pass.
 
 Alignment: choose T a multiple of 8*128 lanes / pack (we default T=256) and
 W a multiple of 128 so the one-hot matmuls are MXU-aligned.
@@ -46,7 +52,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core import engine
-from repro.core.engine import ACC, MCHD
+from repro.core.engine import MCHD
 
 
 def _one_hot(idx: jax.Array, width: int) -> jax.Array:
@@ -62,50 +68,41 @@ def _match_tile(u, v, state_ref, *, vector_rounds: int, window: int, fallback: b
     Writes committed MCHDs into ``state_ref`` round by round; returns
     (matched bool[T], conflicts int32[T])."""
     valid = (u >= 0) & (u != v)
+    # matrix blocked-impl: T x T VPU compares are native here, and Mosaic
+    # has no sort for the claim-sort twin (engine docstring) — same function.
+    blocked_fn = engine.blocked_from_matrix(engine.share_matrix(u, v, valid))
 
     # one-hots are reused by every round: gather AND scatter operands.
     hu = _one_hot(jnp.where(valid, u, -1), window)  # [T, W]
     hv = _one_hot(jnp.where(valid, v, -1), window)
 
-    def read_state():
-        state = state_ref[...]
+    def gather(state):
         return hu @ state, hv @ state  # MXU gathers
 
-    def apply_commits(commit):
+    def scatter(state, commit):
         # conflict-free scatter: committed edges are endpoint-disjoint
         ci = commit.astype(jnp.int32)
         hit = (ci @ hu) + (ci @ hv)  # [W]
-        state_ref[...] = jnp.where(hit > 0, MCHD, state_ref[...])
+        return jnp.where(hit > 0, MCHD, state)
+
+    def read_state():
+        return gather(state_ref[...])
+
+    def apply_commits(commit):
+        state_ref[...] = scatter(state_ref[...], commit)
 
     matched, conflicts = engine.run_first_claim_rounds(
-        u, v, valid, read_state, apply_commits, vector_rounds
+        u, v, valid, read_state, apply_commits, vector_rounds, blocked_fn
     )
 
     if fallback:
-        # exact sequential cleanup of pathological chains (rare)
-        t = u.shape[0]
-        state = state_ref[...]
-        su = hu @ state
-        sv = hv @ state
-        remaining = valid & (~matched) & (su == ACC) & (sv == ACC)
-
-        def body(i, carry):
-            state, matched = carry
-            rem_i = remaining[i]
-            ui = u[i]
-            vi = v[i]
-            s_u = state[jnp.where(rem_i, ui, 0)]
-            s_v = state[jnp.where(rem_i, vi, 0)]
-            take = rem_i & (s_u == ACC) & (s_v == ACC)
-            state = jnp.where(
-                take,
-                state.at[ui].set(MCHD).at[vi].set(MCHD),
-                state,
-            )
-            matched = matched.at[i].set(matched[i] | take)
-            return state, matched
-
-        state, matched = jax.lax.fori_loop(0, t, body, (state, matched))
+        # exact vectorized cleanup of pathological chains (rare): iterated
+        # first-claim rounds to fixpoint == the sequential index-order greedy
+        # (engine.greedy_fallback_rounds), all VPU/MXU work — no scalar loop.
+        state, matched, _taken = engine.greedy_fallback_rounds(
+            state_ref[...], u, v, valid, matched, blocked_fn,
+            gather=gather, scatter=scatter,
+        )
         state_ref[...] = state
 
     return matched, conflicts
@@ -184,11 +181,102 @@ def skipper_pipeline_kernel(
     conflicts_ref[0, :] = conflicts
 
 
+def skipper_boundary_kernel(
+    u_ref,
+    v_ref,
+    state_in_ref,
+    state_ref,
+    matched_ref,
+    conflicts_ref,
+    *,
+    vector_rounds: int,
+    n_flat: int,
+    conflict_method: str,
+):
+    """One grid step = one tile of T global-tier edges (cross-window +
+    coalesced sparse-window) against the FULL flattened state.
+
+    The state BlockSpec index map is constant, so the whole [n_flat] state
+    vector stays VMEM-resident across all boundary tiles and is written back
+    to HBM once — the epilogue joins the windowed sweep as device-resident
+    code instead of a host-level jnp scan. Decision logic is exactly
+    ``engine.tile_pass`` (shared first-claim rounds + greedy fallback), so
+    the jnp reference epilogue in ops.py is bit-identical by construction.
+
+    VMEM: n_flat * 4 B for the state (e.g. 64 KiB at n=16k, 4 MiB at n=1M)
+    plus the T x T share matrix — the full-state residency bounds the graph
+    size per core; shard the graph (core/distributed.py) beyond that.
+
+    Compiled-Mosaic caveat (untested here — CPU CI only exercises
+    interpret=True): tile_pass's state gather/scatter are dynamic fancy
+    indexing, which Mosaic may refuse to lower even though the blocked
+    predicate is forced to the matrix form below. If real-TPU lowering
+    fails, this kernel needs the scalar-prefetch two-window-block design
+    from ROADMAP.md (gather/scatter become block loads + one-hot matmuls
+    like the windowed kernel); the driver-level contract (second kernel,
+    one compilation unit, bit-identical to the jnp scan) is unchanged.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        state_ref[...] = state_in_ref[...]
+
+    state, matched, conflicts, _fb = engine.tile_pass(
+        state_ref[...], u_ref[...], v_ref[...],
+        n=n_flat, vector_rounds=vector_rounds, conflict_method=conflict_method,
+    )
+    state_ref[...] = state
+    matched_ref[...] = matched.astype(jnp.int32)
+    conflicts_ref[...] = conflicts
+
+
+def build_boundary_matcher(
+    num_tiles: int,
+    tile_size: int,
+    n_flat: int,
+    vector_rounds: int = 1,
+    interpret: bool = True,
+):
+    """Construct the pallas_call resolving the global-tier stream: u/v are
+    int32[num_tiles * tile_size] renumbered-global ids (-1 padding), state0
+    is the int32[n_flat] flattened post-sweep state. Returns (state, matched,
+    conflicts)."""
+    kernel = functools.partial(
+        skipper_boundary_kernel,
+        vector_rounds=vector_rounds,
+        n_flat=n_flat,
+        # identical function either way (engine docstring); compiled Mosaic
+        # lacks sort/scatter, interpret mode takes the fast adaptive path.
+        conflict_method="auto" if interpret else "matrix",
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_size,), lambda i: (i,)),      # u tiles
+            pl.BlockSpec((tile_size,), lambda i: (i,)),      # v tiles
+            pl.BlockSpec((n_flat,), lambda i: (0,)),         # initial state
+        ],
+        out_specs=[
+            pl.BlockSpec((n_flat,), lambda i: (0,)),         # state (resident)
+            pl.BlockSpec((tile_size,), lambda i: (i,)),      # matched
+            pl.BlockSpec((tile_size,), lambda i: (i,)),      # conflicts
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_flat,), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles * tile_size,), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles * tile_size,), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+
+
 def build_window_matcher(
     num_tiles: int,
     tile_size: int,
     window: int,
-    vector_rounds: int = 3,
+    vector_rounds: int = 1,
     fallback: bool = True,
     interpret: bool = True,
 ):
@@ -227,7 +315,7 @@ def build_pipeline_matcher(
     tiles_per_window: int,
     tile_size: int,
     window: int,
-    vector_rounds: int = 3,
+    vector_rounds: int = 1,
     fallback: bool = True,
     interpret: bool = True,
 ):

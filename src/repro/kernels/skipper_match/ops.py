@@ -2,14 +2,18 @@
 
 ``skipper_match_window`` — raw windowed matcher (edges already window-local).
 ``skipper_match``        — full-graph driver, device-resident: a one-shot host
-    precompute (``graphs/windows.build_window_schedule``) packs the canonical
-    edge stream into a static ``[num_windows, tiles_per_window, tile_size]``
-    schedule, then ONE traced function covers the whole graph: a single
-    ``pallas_call`` over the 2-D (window, tile) grid — the vertex-state block
+    precompute (``graphs/windows.build_window_schedule``, optionally behind a
+    ``reorder=`` locality renumbering) packs the canonical edge stream into a
+    static two-tier ``[num_rows, tiles_per_window, tile_size]`` schedule,
+    then ONE traced function covers the whole graph: a single ``pallas_call``
+    over the 2-D (row, tile) grid of dense windows — the vertex-state block
     revolves through VMEM per window, no host round-trips — followed by an
-    in-device first-claim epilogue (``core/engine.tile_pass``) that resolves
-    cross-window boundary edges against the full state. Every edge is still
-    decided exactly once; Counters are computed on device.
+    in-device first-claim epilogue (a second Pallas kernel with the full
+    state VMEM-resident; ``engine.tile_pass`` scan on the xla twin) that
+    resolves the global tier (cross-window + coalesced sparse-window edges)
+    against the full state. Every edge is still decided exactly once;
+    Counters are computed on device; mask/conflicts/state come back in
+    original stream order / vertex ids even when the schedule is reordered.
 
 ``interpret`` is a debug flag: ``None`` (default) resolves to False on TPU
 (compiled Mosaic) and True elsewhere (Pallas' interpreter is the only Pallas
@@ -31,6 +35,7 @@ from repro.core.types import STATE_DTYPE, Counters, MatchResult
 from repro.graphs.types import EdgeList
 from repro.graphs.windows import WindowSchedule, build_window_schedule
 from repro.kernels.skipper_match.kernel import (
+    build_boundary_matcher,
     build_pipeline_matcher,
     build_window_matcher,
 )
@@ -55,7 +60,7 @@ def skipper_match_window(
     v: jax.Array,
     state0: jax.Array,
     tile_size: int = 256,
-    vector_rounds: int = 3,
+    vector_rounds: int = 1,
     fallback: bool = True,
     interpret: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -81,6 +86,7 @@ def skipper_match_window(
 @functools.lru_cache(maxsize=64)
 def _build_pipeline(
     num_windows: int,
+    num_rows: int,
     tiles_per_window: int,
     tile_size: int,
     window: int,
@@ -92,57 +98,85 @@ def _build_pipeline(
     backend: str,
 ):
     """One jitted compilation unit per static schedule shape: windowed kernel
-    sweep + boundary epilogue + on-device counters."""
+    sweep over the dense rows + boundary epilogue + on-device counters.
+
+    ``row_ids`` maps schedule rows to window ids (two-tier compaction);
+    ``perm`` maps original vertex ids to renumbered ids (identity when the
+    schedule was built without reordering) — the returned state is gathered
+    through it so callers always see original ids.
+    """
     n_flat = num_windows * window
     nb_tiles = num_boundary_padded // tile_size
     m = num_edges
 
-    def pipeline(u2, v2, eidx, bu, bv, bidx):
+    def pipeline(u2, v2, src, bu, bv, row_ids, perm):
         global _PIPELINE_TRACES
         _PIPELINE_TRACES += 1  # trace-time side effect (compilation counter)
 
         if backend == "pallas":
             call = build_pipeline_matcher(
-                num_windows, tiles_per_window, tile_size, window,
+                num_rows, tiles_per_window, tile_size, window,
                 vector_rounds, True, interpret,
             )
-            state0 = jnp.zeros((num_windows, window), jnp.int32)
+            state0 = jnp.zeros((num_rows, window), jnp.int32)
             state2, matched2, conf2 = call(u2, v2, state0)
         else:  # "xla": the jnp twin of the identical schedule
             run = make_ref_pipeline(window, vector_rounds)
             state2, matched2, conf2 = run(
-                u2.reshape(num_windows, tiles_per_window, tile_size),
-                v2.reshape(num_windows, tiles_per_window, tile_size),
+                u2.reshape(num_rows, tiles_per_window, tile_size),
+                v2.reshape(num_rows, tiles_per_window, tile_size),
             )
 
-        # Boundary epilogue: cross-window edges against the full flattened
-        # state, same first-claim tile pass, still inside this trace.
-        flat = state2.reshape(n_flat)
-        if nb_tiles:
-            but = bu.reshape(nb_tiles, tile_size)
-            bvt = bv.reshape(nb_tiles, tile_size)
+        # Rows hold only the dense windows: scatter them into the full
+        # [num_windows, window] state (coalesced windows stay all-ACC — their
+        # edges are decided by the epilogue below). The xla twin switches to
+        # the uint8 at-rest encoding here (quarters the epilogue's
+        # full-state traffic); the Pallas boundary kernel keeps the VMEM
+        # int32.
+        state_dt = jnp.int32 if backend == "pallas" else jnp.uint8
+        flat = (
+            jnp.zeros((num_windows, window), state_dt)
+            .at[row_ids].set(state2.astype(state_dt))
+            .reshape(n_flat)
+        )
 
-            def bstep(st, uv):
-                st, mt, cf, _fb = engine.tile_pass(
-                    st, uv[0], uv[1], n=n_flat, vector_rounds=vector_rounds
+        # Global-tier epilogue: cross-window + coalesced edges against the
+        # full flattened state, same first-claim tile pass, still inside this
+        # trace. On the pallas path this is the second kernel of the
+        # compilation unit (full state VMEM-resident across its tiles); the
+        # xla twin runs the bit-identical tile_pass scan.
+        if nb_tiles:
+            if backend == "pallas":
+                bcall = build_boundary_matcher(
+                    nb_tiles, tile_size, n_flat, vector_rounds, interpret
                 )
-                return st, (mt, cf)
+                flat, bmt, bcf = bcall(bu, bv, flat)
+            else:
+                but = bu.reshape(nb_tiles, tile_size)
+                bvt = bv.reshape(nb_tiles, tile_size)
 
-            flat, (bmt, bcf) = jax.lax.scan(bstep, flat, (but, bvt))
+                def bstep(st, uv):
+                    st, mt, cf, _fb = engine.tile_pass(
+                        st, uv[0], uv[1], n=n_flat, vector_rounds=vector_rounds
+                    )
+                    return st, (mt, cf)
 
-        # Scatter slot-order decisions back to stream order. Padding slots
-        # carry edge_index == -1 -> routed to the extra slot m and sliced off.
-        mask = jnp.zeros((m + 1,), jnp.bool_)
-        conf = jnp.zeros((m + 1,), jnp.int32)
-        wi = jnp.where(eidx.reshape(-1) >= 0, eidx.reshape(-1), m)
-        mask = mask.at[wi].set(matched2.reshape(-1).astype(jnp.bool_))
-        conf = conf.at[wi].set(conf2.reshape(-1))
+                flat, (bmt, bcf) = jax.lax.scan(bstep, flat, (but, bvt))
+
+        # Gather slot-order decisions back to stream order through the
+        # host-precomputed map (``WindowSchedule.stream_src``): decision
+        # slot layout is [windowed ++ global-tier ++ one zero pad slot].
+        # A gather, not a scatter — a |E|-index scatter costs ~100x more on
+        # CPU XLA and the map is static per schedule.
+        dec = [matched2.reshape(-1)]
+        cfs = [conf2.reshape(-1)]
         if nb_tiles:
-            bwi = jnp.where(bidx >= 0, bidx, m)
-            mask = mask.at[bwi].set(bmt.reshape(-1))
-            conf = conf.at[bwi].set(bcf.reshape(-1))
-        mask = mask[:m]
-        conf = conf[:m]
+            dec.append(bmt.reshape(-1).astype(jnp.int32))
+            cfs.append(bcf.reshape(-1))
+        dec.append(jnp.zeros((1,), jnp.int32))
+        cfs.append(jnp.zeros((1,), jnp.int32))
+        mask = jnp.concatenate(dec)[src] > 0
+        conf = jnp.concatenate(cfs)[src]
 
         nmatch = jnp.sum(mask).astype(jnp.int32)
         nconf = jnp.sum(conf).astype(jnp.int32)
@@ -152,7 +186,9 @@ def _build_pipeline(
             state_stores=2 * nmatch,
             rounds=jnp.asarray(1, jnp.int32),
         )
-        state_out = flat[:num_vertices].astype(STATE_DTYPE)
+        # back to ORIGINAL vertex ids: original vertex i lives at renumbered
+        # slot perm[i] of the flattened state (perm = arange when unordered).
+        state_out = flat[perm].astype(STATE_DTYPE)
         return mask, state_out, conf, counters
 
     return jax.jit(pipeline)
@@ -162,11 +198,12 @@ def skipper_match(
     edges: Optional[EdgeList] = None,
     window: int = 2048,
     tile_size: int = 256,
-    vector_rounds: int = 3,
+    vector_rounds: int = 1,
     interpret: Optional[bool] = None,
     backend: str = "pallas",
     schedule: Optional[WindowSchedule] = None,
     dispersed: bool = True,
+    reorder: str = "none",
     with_conflicts: bool = False,
 ) -> Union[MatchResult, Tuple[MatchResult, jax.Array]]:
     """Full-graph device-resident matcher: one traced pipeline for all
@@ -174,19 +211,24 @@ def skipper_match(
 
     Pass ``schedule`` (from ``build_window_schedule``) to skip the host
     precompute — e.g. when timing the compiled device path; ``window`` /
-    ``tile_size`` / ``dispersed`` are then taken from the schedule. The
-    result's mask/conflicts are aligned with the original edge stream order.
+    ``tile_size`` / ``dispersed`` / ``reorder`` are then taken from the
+    schedule. ``reorder`` selects a locality renumbering policy
+    (``graphs/reorder.py``); results — mask, conflicts AND state — are
+    always in the original edge-stream order / vertex ids regardless.
     """
     if backend not in ("pallas", "xla"):
         raise ValueError(f"unknown backend {backend!r}")
     if schedule is None:
         if edges is None:
             raise ValueError("need either edges or a prebuilt schedule")
-        schedule = build_window_schedule(edges, window, tile_size, dispersed)
+        schedule = build_window_schedule(
+            edges, window, tile_size, dispersed, reorder=reorder
+        )
     if interpret is None:
         interpret = _auto_interpret()
     fn = _build_pipeline(
         schedule.num_windows,
+        schedule.num_rows,
         schedule.tiles_per_window,
         schedule.tile_size,
         schedule.window,
@@ -197,13 +239,17 @@ def skipper_match(
         bool(interpret),
         backend,
     )
+    perm = schedule.perm
+    if perm is None:
+        perm = jnp.arange(schedule.num_vertices, dtype=jnp.int32)
     mask, state, conflicts, counters = fn(
         jnp.asarray(schedule.u_tiles),
         jnp.asarray(schedule.v_tiles),
-        jnp.asarray(schedule.edge_index),
+        jnp.asarray(schedule.stream_src),
         jnp.asarray(schedule.boundary_u),
         jnp.asarray(schedule.boundary_v),
-        jnp.asarray(schedule.boundary_index),
+        jnp.asarray(schedule.window_ids),
+        jnp.asarray(perm),
     )
     result = MatchResult(match_mask=mask, state=state, counters=counters)
     if with_conflicts:

@@ -30,6 +30,7 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import ARCH_IDS, TrainConfig, get_config, get_shape, runnable_cells
 from repro.launch import adapters
 from repro.launch.mesh import make_production_mesh
@@ -104,7 +105,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool):
     n_total = count_params(abstract_params)
     n_active = active_params(cfg, n_total)
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.kind == "train":
             abstract_opt = jax.eval_shape(
                 lambda: adamw.init_state(abstract_params, tcfg, _opt_moment_dtype(cfg))

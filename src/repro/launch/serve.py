@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs import get_config, get_smoke_config
 from repro.launch import adapters
 from repro.launch.mesh import make_host_mesh
@@ -41,7 +42,7 @@ def serve(arch: str, smoke: bool, num_requests: int, slots: int,
     max_len = prompt_len + max_new
 
     mesh = make_host_mesh()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         params = adapters.init_fn(jax.random.PRNGKey(seed), cfg)
         serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
 

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import Checkpointer
+from repro import compat
 from repro.configs import TrainConfig, get_config, get_smoke_config
 from repro.data import DataConfig, batch_for_step
 from repro.launch import adapters
@@ -79,7 +80,7 @@ def train(arch: str, smoke: bool, steps: int, batch_size: int, seq_len: int,
         start_step = meta["step"]
         print(f"[train] resumed from step {start_step}")
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         p_shardings = param_shardings(params, mesh)
         params = jax.device_put(params, p_shardings)
         step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))

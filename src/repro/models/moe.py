@@ -28,6 +28,7 @@ from typing import Any, Dict
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.core.bipartite import bmatch_assign
 from repro.models import layers as L
@@ -194,7 +195,7 @@ def moe_mlp(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig) -> jax.Array:
 def _mesh_data_axes():
     """(mesh, data axes, shard count) if a >1-shard mesh is in scope."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
         if mesh is None or mesh.empty or not mesh.axis_names:
             return None, (), 1
         axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
@@ -252,7 +253,7 @@ def _dispatch(xf, exp_flat, col, tok_global, ok_flat, e, c_total, d):
         ].add(gathered, mode="drop")
         return buf_l[:, None]  # reinsert the sharded C axis block dim
 
-    out = jax.shard_map(
+    out = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(axes, None, None), P(axes, None), P(axes, None),
                   P(axes, None), P(axes, None)),
@@ -300,7 +301,7 @@ def _combine(y_buf, xf, exp_flat, col, tok_global, ok_flat, w_flat):
         ].add(contrib, mode="drop")
         return out_l[None]
 
-    out = jax.shard_map(
+    out = compat.shard_map(
         body, mesh=mesh,
         in_specs=(P(None, axes, None, None), P(axes, None), P(axes, None),
                   P(axes, None), P(axes, None), P(axes, None)),

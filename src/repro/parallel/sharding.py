@@ -24,6 +24,8 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
+
 
 @dataclasses.dataclass(frozen=True)
 class AxisRules:
@@ -136,7 +138,7 @@ def constrain(x: jax.Array, spec: Optional[P]) -> jax.Array:
     if spec is None:
         return x
     try:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
         if mesh is None or mesh.empty or not mesh.axis_names:
             return x
         # drop axes the current mesh doesn't have (uneven dims are fine:

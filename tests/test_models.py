@@ -120,10 +120,18 @@ def test_ssd_decode_matches_train_forward():
 
 def test_swa_rolling_cache_matches_full_cache():
     """Sliding-window decode with a rolling window-sized cache must equal
-    decode with a full-length cache (mixtral-style SWA)."""
+    decode with a full-length cache (mixtral-style SWA).
+
+    Run dense (num_experts=0): capacity-limited MoE routing is batched over
+    the whole sequence, so teacher-forced forward and single-token decode can
+    legitimately route a token differently (capacity pressure differs) — a
+    data-dependent divergence that has nothing to do with the rolling cache
+    under test here."""
+    import dataclasses
     from repro.models import transformer as T
-    cfg = get_smoke_config("mixtral-8x7b")          # sliding_window=32
-    full_cfg = cfg
+    cfg = dataclasses.replace(
+        get_smoke_config("mixtral-8x7b"), num_experts=0  # sliding_window=32
+    )
     params = T.init_params(jax.random.PRNGKey(2), cfg)
     rng = np.random.default_rng(1)
     prompt = jnp.asarray(rng.integers(1, cfg.vocab_size, (1, 40)), jnp.int32)

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.roofline.hlo_parse import analyze_hlo
 from repro.roofline.analysis import analyze, model_flops, PEAK_FLOPS
 
@@ -22,7 +23,7 @@ def test_scan_trip_count_exact():
     assert res.dot_flops == 8 * 2 * 256**3
     assert res.while_trip_counts == [8]
     # the raw cost_analysis undercount this module guards against:
-    assert c.cost_analysis()["flops"] == 2 * 256**3
+    assert compat.cost_analysis(c)["flops"] == 2 * 256**3
 
 
 def test_nested_scan_trip_counts():

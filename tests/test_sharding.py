@@ -3,15 +3,14 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro import compat
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.launch import adapters
 from repro.parallel.sharding import param_specs, rules_for_mesh
 
 
 def fake_mesh(shape=(4, 2), names=("data", "model")):
-    return jax.sharding.AbstractMesh(
-        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names)
-    )
+    return compat.abstract_mesh(shape, names)
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
