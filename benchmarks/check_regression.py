@@ -1,15 +1,18 @@
 """Bench-smoke regression gate (CI).
 
 Compares a freshly recorded kernel_bench JSON against the committed baseline
-and fails if any ``kernel/windowed_pipeline*`` row regressed beyond the
-tolerance.
+and fails if any gated row (``kernel/windowed_pipeline/*`` or
+``kernel/distributed_pipeline/*``) regressed beyond the tolerance.
 
 CI runners and the recording machine differ in absolute speed, so raw
-``us_per_call`` comparisons are meaningless across hosts. Each windowed row
-is therefore NORMALIZED by the same run's ``kernel/jnp_matcher`` row for the
-same graph (both matchers share the engine, so host speed cancels):
+``us_per_call`` comparisons are meaningless across hosts. Each gated row is
+therefore NORMALIZED by a same-run sibling for the same graph (both sides
+share the engine and the host, so machine speed cancels): the windowed
+pipeline by the jnp tiled matcher, the locality-sharded distributed matcher
+by the dispersed jnp-local-pass distributed baseline (same forced-4-device
+subprocess):
 
-    ratio(run, graph) = us(windowed_pipeline/graph) / us(jnp_matcher/graph)
+    ratio(run, graph) = us(gated_row/graph) / us(norm_row/graph)
 
 and the gate is ``ratio_new <= ratio_baseline * (1 + tolerance)``.
 
@@ -22,20 +25,25 @@ import argparse
 import json
 import sys
 
-# gated rows; the _noreorder twin is reported but not gated (it exists for
-# the trajectory, and flakes more: no reorder => epilogue-dominated timing)
-PREFIXES = ("kernel/windowed_pipeline/",)
-INFO_PREFIXES = ("kernel/windowed_pipeline_noreorder/",)
-NORM = "kernel/jnp_matcher/"
+# gated prefix -> same-run normalization prefix; the _noreorder twin is
+# reported but not gated (it exists for the trajectory, and flakes more:
+# no reorder => epilogue-dominated timing)
+PREFIXES = {
+    "kernel/windowed_pipeline/": "kernel/jnp_matcher/",
+    "kernel/distributed_pipeline/": "kernel/distributed_jnp_local/",
+}
+INFO_PREFIXES = {
+    "kernel/windowed_pipeline_noreorder/": "kernel/jnp_matcher/",
+}
 
 
 def _ratios(data: dict, prefixes=PREFIXES) -> dict:
     out = {}
     for name, row in data.items():
-        for prefix in prefixes:
+        for prefix, norm_prefix in prefixes.items():
             if name.startswith(prefix):
                 graph = name[len(prefix):]
-                norm = data.get(NORM + graph)
+                norm = data.get(norm_prefix + graph)
                 if norm is None:
                     continue
                 out[name] = row["us_per_call"] / norm["us_per_call"]
@@ -57,8 +65,9 @@ def main() -> int:
     new = _ratios(new_data)
     base = _ratios(base_data)
 
+    info_base = _ratios(base_data, INFO_PREFIXES)
     for name, r in sorted(_ratios(new_data, INFO_PREFIXES).items()):
-        b = _ratios(base_data, INFO_PREFIXES).get(name)
+        b = info_base.get(name)
         print(f"{name}: ratio {r:.3f} vs baseline "
               f"{'%.3f' % b if b is not None else 'n/a'} (informational)")
 
@@ -75,11 +84,11 @@ def main() -> int:
         if r_new > limit:
             failed.append(f"{name}: {r_new:.3f} > {limit:.3f}")
     if not base:
-        print("no windowed_pipeline rows in baseline — nothing to check")
+        print("no gated pipeline rows in baseline — nothing to check")
     if failed:
         print("\nregressions:\n  " + "\n  ".join(failed))
         return 1
-    print("\nno windowed_pipeline regression beyond tolerance")
+    print("\nno gated pipeline regression beyond tolerance")
     return 0
 
 

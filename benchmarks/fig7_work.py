@@ -10,6 +10,7 @@ import numpy as np
 
 from benchmarks.common import graph_suite, emit
 from repro.core import sgmm, skipper, sidmm, ems_israeli_itai
+from repro.core.distributed import distributed_skipper
 
 
 def run(scale: str = "small"):
@@ -22,6 +23,10 @@ def run(scale: str = "small"):
             ("skipper", lambda: skipper(g, tile_size=32, vector_rounds=1)[0]),
             ("sidmm", lambda: sidmm(g, batch_size=4096)),
             ("ems_ii", lambda: ems_israeli_itai(g)),
+            # distributed counters use the same real-edge-work accounting
+            # (sentinel slots scanned during drain rounds count nothing),
+            # so this row is directly comparable to skipper's
+            ("skipper_dist", lambda: distributed_skipper(g, block_size=4096)[0]),
         ]:
             r = fn()
             per_edge = float(r.counters.total_accesses) / m

@@ -1,6 +1,7 @@
 """Kernel micro-benchmarks.
 
-Two matcher paths are timed, selectable with ``--matcher``:
+Three matcher paths are timed, selectable with ``--matcher`` (``both`` runs
+all of them):
 
 * ``jnp``      — the single-device tiled matcher (``core.skipper``) and the
                  windowed oracle / MoE router micro-benches.
@@ -10,6 +11,17 @@ Two matcher paths are timed, selectable with ``--matcher``:
                  compiled path is the pipeline's XLA twin — identical
                  schedule and semantics, one compilation unit; on TPU the
                  same driver compiles the Pallas kernel via Mosaic.
+* ``distributed`` — the multi-device matcher on 4 FORCED CPU host devices
+                 (a subprocess sets ``--xla_force_host_platform_device_count``
+                 so the main process keeps its jax). Two rows per graph:
+                 ``kernel/distributed_pipeline/*`` (locality-sharded: the
+                 window tier runs the device-resident pipeline per device,
+                 only the global tier pays propose/gather/replay) and
+                 ``kernel/distributed_jnp_local/*`` (the dispersed-block
+                 jnp-local-pass baseline). The recorded JSON carries the
+                 achieved ``intra`` fraction and collective payload
+                 (``gathered_ints``); check_regression.py gates the pipeline
+                 row normalized by the jnp-local row of the same run.
 
 ``--reorder {none,degree,bfs,greedy}`` selects the locality renumbering the
 windowed pipeline's schedule is built with (``graphs/reorder.py``; default
@@ -136,6 +148,115 @@ def _bench_windowed(rows, extras, scale: str, smoke: bool, reorder: str):
             }
 
 
+def _distributed_cases(scale: str, smoke: bool):
+    """Graphs + schedule params for the distributed rows (subprocess side)."""
+    if smoke:
+        return {"rmat12": ("rmat", 12, 8, 1)}, 1024, 256, 512, 5
+    if scale == "large":
+        return {"rmat16": ("rmat", 16, 16, 1)}, 4096, 256, 512, 5
+    return (
+        {"rmat14": ("rmat", 14, 16, 1), "grid_256": ("grid", 256, 256, 0)},
+        2048, 256, 512, 7,
+    )
+
+
+def _build_case(spec):
+    kind, a, b, seed = spec
+    return rmat_graph(a, b, seed=seed) if kind == "rmat" else grid_graph(a, b)
+
+
+def distributed_worker(scale: str, smoke: bool, reorder: str) -> None:
+    """Runs INSIDE the forced-4-device subprocess: times the locality-sharded
+    distributed matcher against the dispersed jnp-local-pass baseline
+    (interleaved min-of-N, like the windowed cells) and prints one JSON line
+    with the rows + recorded extras."""
+    import jax
+
+    # the rows are recorded as 4-device CPU — pin exactly that (the forcing
+    # flag is a no-op on accelerator backends)
+    assert jax.default_backend() == "cpu", jax.default_backend()
+    assert len(jax.devices()) == 4, jax.devices()
+    from repro.core.distributed import distributed_skipper
+    from repro.graphs import partition_schedule
+
+    specs, window, tile, block, iters = _distributed_cases(scale, smoke)
+    rows, extras = [], {}
+    for name, spec in specs.items():
+        g = _build_case(spec)
+        m = g.num_edges
+        sched = build_window_schedule(g, window=window, tile_size=tile,
+                                      reorder=reorder)
+        ds = partition_schedule(sched, 4, block)
+        last = {}  # the timed calls' stats — no extra stat-collection runs
+
+        def keep(cell, out):
+            last[cell] = out[1]
+            return out
+
+        cells = [
+            (f"kernel/distributed_pipeline/{name}",
+             lambda ds=ds, c=f"kernel/distributed_pipeline/{name}": keep(
+                 c, distributed_skipper(device_schedule=ds, tile_size=tile))),
+            (f"kernel/distributed_jnp_local/{name}",
+             lambda g=g, c=f"kernel/distributed_jnp_local/{name}": keep(
+                 c, distributed_skipper(g, block_size=block, tile_size=tile))),
+        ]
+        times = {cell: [] for cell, _ in cells}
+        for _ in range(iters + 1):  # first pass = warmup/compile
+            for cell, fn in cells:
+                times[cell].append(time_call(fn, warmup=0, iters=1))
+        for cell, _ in cells:
+            t = min(times[cell][1:])
+            gints = int(last[cell].gathered_ints)
+            if cell.startswith("kernel/distributed_pipeline/"):
+                derived = (f"{m / t / 1e6:.1f}Medges_s"
+                           f"_intra{sched.intra_fraction:.2f}")
+                extras[cell] = {
+                    "reorder": sched.reorder,
+                    "intra": round(sched.intra_fraction, 4),
+                    "gathered_ints": gints,
+                    "num_devices": 4,
+                }
+            else:
+                derived = f"{m / t / 1e6:.1f}Medges_s"
+                extras[cell] = {
+                    "gathered_ints": gints,
+                    "num_devices": 4,
+                }
+            rows.append(f"{cell},{t * 1e6:.1f},{derived}")
+    print(json.dumps({"rows": rows, "extras": extras}))
+
+
+def _bench_distributed(rows, extras, scale: str, smoke: bool, reorder: str):
+    """Spawn the forced-4-device subprocess and merge its rows/extras."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), root,
+                    env.get("PYTHONPATH", "")) if p
+    )
+    cmd = [sys.executable, "-m", "benchmarks.kernel_bench",
+           "--distributed-worker", "--scale", scale, "--reorder", reorder]
+    if smoke:
+        cmd.append("--smoke")
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=3600, cwd=root)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"distributed bench worker failed:\n{proc.stderr[-3000:]}"
+        )
+    payload = json.loads(proc.stdout.strip().splitlines()[-1])
+    for line in payload["rows"]:
+        print(line, flush=True)
+        rows.append(line)
+    extras.update(payload["extras"])
+
+
 def run(scale: str = "small", matcher: str = "both", smoke: bool = False,
         record: str | None = None, reorder: str = "degree"):
     rows = []
@@ -144,6 +265,8 @@ def run(scale: str = "small", matcher: str = "both", smoke: bool = False,
         _bench_jnp(rows, smoke)
     if matcher in ("both", "windowed"):
         _bench_windowed(rows, extras, scale, smoke, reorder)
+    if matcher in ("both", "distributed"):
+        _bench_distributed(rows, extras, scale, smoke, reorder)
     if record:
         data = {}
         for line in rows:
@@ -159,12 +282,19 @@ def run(scale: str = "small", matcher: str = "both", smoke: bool = False,
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "large"])
-    ap.add_argument("--matcher", default="both", choices=["both", "jnp", "windowed"])
+    ap.add_argument("--matcher", default="both",
+                    choices=["both", "jnp", "windowed", "distributed"])
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--record", default=None)
     ap.add_argument("--reorder", default="degree",
                     choices=["none", "degree", "bfs", "greedy"])
+    ap.add_argument("--distributed-worker", action="store_true",
+                    help="internal: run the forced-4-device timing body and "
+                         "emit one JSON line (spawned by _bench_distributed)")
     args = ap.parse_args()
-    print("name,us_per_call,derived")
-    run(args.scale, matcher=args.matcher, smoke=args.smoke,
-        record=args.record, reorder=args.reorder)
+    if args.distributed_worker:
+        distributed_worker(args.scale, args.smoke, args.reorder)
+    else:
+        print("name,us_per_call,derived")
+        run(args.scale, matcher=args.matcher, smoke=args.smoke,
+            record=args.record, reorder=args.reorder)

@@ -19,9 +19,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "large"])
     ap.add_argument("--only", default=None)
-    ap.add_argument("--matcher", default="both", choices=["both", "jnp", "windowed"],
-                    help="which matcher path kernel_bench times "
-                         "(jnp tiled vs device-resident windowed pipeline)")
+    ap.add_argument("--matcher", default="both",
+                    choices=["both", "jnp", "windowed", "distributed"],
+                    help="which matcher path kernel_bench times (jnp tiled, "
+                         "device-resident windowed pipeline, or the "
+                         "forced-4-device distributed matcher)")
     ap.add_argument("--reorder", default="degree",
                     choices=["none", "degree", "bfs", "greedy"],
                     help="locality reordering for the windowed schedule")

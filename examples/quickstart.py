@@ -46,6 +46,15 @@ def main():
           f"proposals={int(dstats.proposals):,} lost={int(dstats.lost_proposals)} "
           f"requeued={int(dstats.requeued)}")
 
+    # 3b. locality-sharded: reorder + window-partition so each device's
+    # round is intra-window work on the device-resident pipeline; only
+    # cross-window edges pay the propose/gather/replay protocol
+    result_s, sstats = distributed_skipper(g, reorder="degree")
+    stats_s = {k: v.item() for k, v in check_matching(g, result_s.match_mask).items()}
+    print(f"distributed (locality-sharded): {stats_s['num_matches']:,} matches | "
+          f"proposals={int(sstats.proposals):,} (global tier only) "
+          f"gathered_ints={int(sstats.gathered_ints):,}")
+
     # 4. the Pallas TPU kernel (interpret mode on CPU)
     small = rmat_graph(scale=11, edge_factor=8, seed=1)
     r_k = skipper_match(small, window=1024, tile_size=128)

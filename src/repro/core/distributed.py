@@ -1,5 +1,24 @@
 """Multi-device Skipper via shard_map — devices play the paper's threads.
 
+Two schedules share one protocol core (``_make_round_fn``):
+
+**Dispersed path** (``reorder="none"``, the paper's §IV-C deal): every edge
+block goes through the four-step round below, exactly like a paper thread
+scanning its blocks.
+
+**Locality-sharded path** (``reorder=``/``window=``): the edge stream is
+renumbered (`graphs/reorder.py`), bucketed into a two-tier
+``WindowSchedule`` and partitioned by `graphs/partition.partition_schedule`.
+Windows are disjoint vertex-id ranges, so each device resolves its dealt
+windows ENTIRELY locally through the device-resident pipeline
+(``engine.window_tier_pass`` — the same Pallas kernel / jnp twin
+``skipper_match`` runs), with zero proposals and zero replay; one psum of
+the per-window states (O(V) ints, no topology) then rebuilds the committed
+full state everywhere, and only the global tier (cross-window + coalesced
+sparse-window edges — the minority after reordering) runs the four-step
+protocol. Masks come back in original stream order and states in original
+vertex ids through the schedule's ``stream_src``/``perm`` round-trip.
+
 Protocol per round (DESIGN.md §2 level 1; paper Alg. 1 adapted to SPMD):
 
   1. LOCAL PASS — each device greedily matches its next dispersed edge block
@@ -26,23 +45,32 @@ Cross-pod: the all_gather composes over ("pod", "data") axes; proposal bytes
 per round are independent of |E| (the paper's "conflict resolution touches no
 topology").
 
-Output is deterministic given (D, block_size) — see DESIGN.md assumption log.
+Output is deterministic given the schedule — (D, block_size) on the
+dispersed path, (window, tile_size, reorder, D, block_size) on the
+locality-sharded one; at D=1 the latter is bit-identical to
+``skipper_match`` on the same schedule (test-pinned). See DESIGN.md §8.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.core.types import ACC, MCHD, STATE_DTYPE, Counters, MatchResult
-from repro.core.engine import tile_pass
+from repro.core.engine import tile_pass, window_tier_pass
 from repro.graphs.types import EdgeList
-from repro.graphs.partition import dispersed_blocks
+from repro.graphs.partition import (
+    DeviceSchedule,
+    dispersed_blocks,
+    locality_device_schedule,
+)
+from repro.graphs.windows import WindowSchedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,10 +84,28 @@ class DistStats:
     undrained: jax.Array        # retry entries alive after drain rounds (must be 0)
     gathered_ints: jax.Array    # collective payload (int32 count) over the run
 
+    @property
+    def ok(self) -> bool:
+        """True iff the must-be-zero invariants actually held: no retry
+        overflow (a dropped edge can silently break maximality) and nothing
+        left undrained. ``distributed_skipper(check=True)`` raises on the
+        spot; callers running ``check=False`` must test this flag."""
+        return int(self.retry_overflow) == 0 and int(self.undrained) == 0
+
+    def raise_if_bad(self) -> None:
+        if not self.ok:
+            raise RuntimeError(
+                "distributed matching violated its must-be-zero invariants: "
+                f"retry_overflow={int(self.retry_overflow)} (edges dropped by "
+                f"a full retry buffer), undrained={int(self.undrained)} "
+                "(retry entries alive after the drain rounds) — the matching "
+                "may be non-maximal. Increase block_size and/or drain_rounds."
+            )
+
 
 def _local_pass(state, u, v, *, n, vector_rounds, tile_size):
     """Greedy pass of a [L]-sized slab in tiles. Returns (post local state,
-    matched mask)."""
+    matched mask, conflicts)."""
     l = u.shape[0]
     num_tiles = l // tile_size
     ut = u.reshape(num_tiles, tile_size)
@@ -67,54 +113,51 @@ def _local_pass(state, u, v, *, n, vector_rounds, tile_size):
 
     def step(st, uv):
         uu, vv = uv
-        st, matched, _, _ = tile_pass(st, uu, vv, n=n, vector_rounds=vector_rounds)
-        return st, matched
+        st, matched, conflicts, _ = tile_pass(
+            st, uu, vv, n=n, vector_rounds=vector_rounds
+        )
+        return st, (matched, conflicts)
 
-    state, matched = jax.lax.scan(step, state, (ut, vt))
-    return state, matched.reshape(-1)
-
-
-def _replay(state, u, v, *, n, vector_rounds, tile_size):
-    """Deterministic first-claim replay of the gathered proposal stream."""
-    return _local_pass(state, u, v, n=n, vector_rounds=vector_rounds, tile_size=tile_size)
+    state, (matched, conflicts) = jax.lax.scan(step, state, (ut, vt))
+    return state, matched.reshape(-1), conflicts.reshape(-1)
 
 
-def distributed_skipper_fn(
-    u_blocks: jax.Array,   # [R, B] this device's dispersed blocks
-    v_blocks: jax.Array,
-    i_blocks: jax.Array,   # [R, B] global stream indices
+def _make_round_fn(
     *,
-    num_vertices: int,
-    num_edges_padded: int,
+    n: int,
+    mask_len: int,
     axis_name: str,
     num_devices: int,
     vector_rounds: int,
     tile_size: int,
-    drain_rounds: int,
-) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, ...]]:
-    """Body executed per device under shard_map."""
-    n = num_vertices
-    # shard_map delivers the device-sharded leading axis as size 1: squeeze.
-    u_blocks = u_blocks.reshape(u_blocks.shape[-2:])
-    v_blocks = v_blocks.reshape(v_blocks.shape[-2:])
-    i_blocks = i_blocks.reshape(i_blocks.shape[-2:])
-    rounds, block = u_blocks.shape
-    cap = block  # retry buffer capacity
+    block: int,
+):
+    """Build the four-step round body shared by both distributed schedules.
 
-    slab = block + cap  # edges examined per round
-    # pad slab to tile multiple
+    The carry is ``(state, mask, ru, rv, ri, stats)`` where ``mask`` is a
+    bool[mask_len] of replay winners indexed by the per-edge stream index
+    carried in ``ri``/the block index arrays, and ``stats`` is the 9-tuple
+    ``(props, req, ovf, gints, reads, loads_local, loads_replay,
+    stores_replay, winners)``. Stats marked *local* count only this device's
+    REAL edge work — padded sentinel slots (-1) scanned during padding and
+    drain rounds contribute nothing — and get psum'd at the end; the replay
+    terms are identical on every device (the replay is replicated) and are
+    counted once.
+    """
+    cap = block  # retry buffer capacity
+    slab = block + cap
     slab_pad = (-slab) % tile_size
     slab_t = slab + slab_pad
 
     def one_round(carry, blk):
-        state, mask, ru, rv, ri, rcount, stats = carry
+        state, mask, ru, rv, ri, stats = carry
         bu, bv, bi = blk
 
         # 1. LOCAL PASS on [retry ++ block]
         u = jnp.concatenate([ru, bu, jnp.full((slab_pad,), -1, jnp.int32)])
         v = jnp.concatenate([rv, bv, jnp.full((slab_pad,), -1, jnp.int32)])
         idx = jnp.concatenate([ri, bi, jnp.full((slab_pad,), -1, jnp.int32)])
-        local_state, proposed = _local_pass(
+        local_state, proposed, local_conf = _local_pass(
             state, u, v, n=n, vector_rounds=vector_rounds, tile_size=tile_size
         )
         valid = (u >= 0) & (u != v)
@@ -136,13 +179,11 @@ def distributed_skipper_fn(
         gv = gv.T.reshape(-1)
         gi = gi.T.reshape(-1)
 
-        # 3. REPLAY on the committed state
-        new_state, winners = _replay(
+        # 3. REPLAY on the committed state (deterministic first-claim order)
+        new_state, winners, _ = _local_pass(
             state, gu, gv, n=n, vector_rounds=vector_rounds, tile_size=tile_size
         )
-        mask = mask.at[jnp.where(winners, gi, num_edges_padded)].set(
-            True, mode="drop"
-        )
+        mask = mask.at[jnp.where(winners, gi, mask_len)].set(True, mode="drop")
 
         # 4. REQUEUE provisional-dead edges that are still free post-replay
         snu = new_state[jnp.clip(u, 0, n - 1)]
@@ -156,67 +197,296 @@ def distributed_skipper_fn(
         nreq = jnp.sum(requeue)
         overflow = jnp.maximum(nreq - cap, 0)
 
-        n_props = jnp.sum(proposed)
-        # stats: proposals, lost, requeued, overflow, undrained, gathered ints
-        props, lost, req, ovf, und, gints = stats
+        # real-work accounting: only valid slots count (padding/sentinel
+        # slots scanned during padded slabs and drain rounds are free);
+        # requeued edges count again on re-scan, like the single-device
+        # matcher's blocked-edge re-reads.
+        nvalid = jnp.sum(valid).astype(jnp.int32)
+        nconf = jnp.sum(jnp.where(valid, local_conf, 0)).astype(jnp.int32)
+        n_props = jnp.sum(proposed).astype(jnp.int32)
+        nwin = jnp.sum(winners).astype(jnp.int32)
+        # all devices' proposals, read once each by the (replicated) replay
+        n_replayed = jnp.sum((gu >= 0) & (gu != gv)).astype(jnp.int32)
+
+        props, req, ovf, gints, reads, l_loc, l_rep, s_rep, wins = stats
         stats = (
             props + n_props,
-            lost,  # derived as (proposals - matches) at the host level
             req + nreq,
             ovf + overflow,
-            und,
             gints + 3 * slab_t * num_devices,
+            reads + nvalid,
+            l_loc + 2 * nvalid + 2 * nconf,
+            l_rep + 2 * n_replayed,
+            s_rep + 2 * nwin,
+            wins + nwin,
         )
-        return (new_state, mask, ru_n, rv_n, ri_n, rcount, stats), jnp.sum(winners)
+        return (new_state, mask, ru_n, rv_n, ri_n, stats), nwin
 
-    state0 = jnp.full((n,), ACC, STATE_DTYPE)
-    mask0 = jnp.zeros((num_edges_padded,), jnp.bool_)
-    empty = jnp.full((cap,), -1, jnp.int32)
+    return one_round, slab_t
+
+
+def _zero_stats():
     z = jnp.zeros((), jnp.int32)
-    stats0 = (z, z, z, z, z, z)
-    carry0 = (state0, mask0, empty, empty, empty, z, stats0)
+    return (z,) * 9
 
-    carry, _ = jax.lax.scan(one_round, carry0, (u_blocks, v_blocks, i_blocks))
 
-    # drain: extra rounds with empty blocks until retry buffers settle
-    empty_blk = (
-        jnp.full((drain_rounds, block), -1, jnp.int32),
-        jnp.full((drain_rounds, block), -1, jnp.int32),
-        jnp.full((drain_rounds, block), -1, jnp.int32),
-    )
-    carry, _ = jax.lax.scan(one_round, carry, empty_blk)
+def _drain_blocks(drain_rounds: int, block: int):
+    e = jnp.full((drain_rounds, block), -1, jnp.int32)
+    return (e, e, e)
 
-    state, mask, ru, rv, ri, _, stats = carry
-    props, lost, req, ovf, und, gints = stats
-    und = und + jnp.sum(ru >= 0)
 
-    # aggregate stats over devices
+def _aggregate_stats(stats, ru, axis_name):
+    """Post-drain stats aggregation: psum the per-device entries, count
+    undrained retries, pass replicated entries through."""
+    props, req, ovf, gints, reads, l_loc, l_rep, s_rep, wins = stats
+    und = jnp.sum(ru >= 0)
     agg = lambda x: jax.lax.psum(x, axis_name)
-    stats_out = (
+    return (
         agg(props),
-        lost,  # computed at host level (global winners vs proposals)
         agg(req),
         agg(ovf),
         agg(und),
-        gints,  # identical on every device already
+        gints,            # identical on every device already
+        agg(reads),
+        agg(l_loc),
+        l_rep,            # replay is replicated: count once
+        s_rep,
+        wins,
     )
-    return state, mask, stats_out
 
 
-def distributed_skipper(
-    edges: EdgeList,
-    mesh: Optional[Mesh] = None,
-    axis_name: str = "data",
-    block_size: int = 512,
-    vector_rounds: int = 2,
-    tile_size: int = 256,
-    drain_rounds: int = 4,
-) -> Tuple[MatchResult, DistStats]:
-    """Run Skipper across the devices of ``mesh`` along ``axis_name``.
+def dispersed_skipper_fn(
+    u_blocks: jax.Array,   # [1, R, B] this device's dispersed blocks
+    v_blocks: jax.Array,
+    i_blocks: jax.Array,   # [1, R, B] global stream indices
+    *,
+    num_vertices: int,
+    num_edges_padded: int,
+    axis_name: str,
+    num_devices: int,
+    vector_rounds: int,
+    tile_size: int,
+    drain_rounds: int,
+) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, ...]]:
+    """Per-device body of the dispersed (raw stream block) schedule."""
+    n = num_vertices
+    # shard_map delivers the device-sharded leading axis as size 1: squeeze.
+    u_blocks = u_blocks.reshape(u_blocks.shape[-2:])
+    v_blocks = v_blocks.reshape(v_blocks.shape[-2:])
+    i_blocks = i_blocks.reshape(i_blocks.shape[-2:])
+    _, block = u_blocks.shape
 
-    Works for any device count >= 1 (D=1 degenerates to the single-device
-    tiled matcher plus a no-op replay).
+    one_round, _ = _make_round_fn(
+        n=n,
+        mask_len=num_edges_padded,
+        axis_name=axis_name,
+        num_devices=num_devices,
+        vector_rounds=vector_rounds,
+        tile_size=tile_size,
+        block=block,
+    )
+
+    state0 = jnp.full((n,), ACC, STATE_DTYPE)
+    mask0 = jnp.zeros((num_edges_padded,), jnp.bool_)
+    empty = jnp.full((block,), -1, jnp.int32)
+    carry0 = (state0, mask0, empty, empty, empty, _zero_stats())
+
+    carry, _ = jax.lax.scan(one_round, carry0, (u_blocks, v_blocks, i_blocks))
+    # drain: extra rounds with empty blocks until retry buffers settle
+    carry, _ = jax.lax.scan(one_round, carry, _drain_blocks(drain_rounds, block))
+
+    state, mask, ru, _, _, stats = carry
+    return state, mask, _aggregate_stats(stats, ru, axis_name)
+
+
+def locality_sharded_fn(
+    u_rows: jax.Array,     # [1, rows_per_device, slots] window-local ids
+    v_rows: jax.Array,
+    row_slot: jax.Array,   # [1, rows_per_device] schedule-row index, -1 pad
+    bu_blocks: jax.Array,  # [1, R, B] global-tier deal (renumbered GLOBAL ids)
+    bv_blocks: jax.Array,
+    bi_blocks: jax.Array,  # [1, R, B] boundary stream positions
+    window_ids: jax.Array,  # int32[num_rows] row -> window id (replicated)
+    *,
+    window: int,
+    tiles_per_window: int,
+    tile_size: int,
+    num_rows: int,
+    num_windows: int,
+    num_boundary_padded: int,
+    axis_name: str,
+    num_devices: int,
+    vector_rounds: int,
+    drain_rounds: int,
+    backend: str,
+    interpret: bool,
+):
+    """Per-device body of the locality-sharded schedule.
+
+    PHASE A (window tier, zero communication): this device's dealt window
+    rows run through the device-resident pipeline — the identical
+    ``engine.window_tier_pass`` entry point ``skipper_match`` uses, so each
+    window's result is bit-identical to the single-device pipeline no matter
+    which device it was dealt to. One psum of the per-row states (disjoint
+    row slots; O(num_rows * window) ints, no topology) rebuilds the
+    committed full state on every device.
+
+    PHASE B (global tier): the boundary blocks run the four-step
+    propose/gather/replay protocol against that committed state — same
+    rounds, seeded with the window-tier commits instead of all-ACC.
+
+    Returns (flat committed state [replicated], this device's window-tier
+    matched slab [sharded], boundary winners mask [replicated], stats).
     """
+    u_rows = u_rows.reshape(u_rows.shape[-2:])
+    v_rows = v_rows.reshape(v_rows.shape[-2:])
+    row_slot = row_slot.reshape(row_slot.shape[-1:])
+    bu_blocks = bu_blocks.reshape(bu_blocks.shape[-2:])
+    bv_blocks = bv_blocks.reshape(bv_blocks.shape[-2:])
+    bi_blocks = bi_blocks.reshape(bi_blocks.shape[-2:])
+    n_flat = num_windows * window
+
+    # ---- PHASE A: device-resident window tier (no collectives) ----------
+    states, matched_w, conf_w = window_tier_pass(
+        u_rows, v_rows,
+        window=window,
+        tiles_per_window=tiles_per_window,
+        tile_size=tile_size,
+        vector_rounds=vector_rounds,
+        backend=backend,
+        interpret=interpret,
+    )
+    w_valid = u_rows >= 0
+    # assemble the committed full state: scatter this device's rows into
+    # schedule-row order (disjoint across devices), psum, then place rows at
+    # their window ids (two-tier compaction; coalesced windows stay all-ACC
+    # — their edges are global-tier).
+    slot = jnp.where(row_slot >= 0, row_slot, num_rows)
+    rows_state = (
+        jnp.zeros((num_rows, window), jnp.int32)
+        .at[slot].set(states.astype(jnp.int32), mode="drop")
+    )
+    rows_state = jax.lax.psum(rows_state, axis_name)
+    flat = (
+        jnp.zeros((num_windows, window), jnp.int32)
+        .at[window_ids].set(rows_state)
+        .reshape(n_flat)
+        .astype(STATE_DTYPE)
+    )
+
+    # ---- PHASE B: global tier via propose/gather/replay -----------------
+    num_rounds, block = bu_blocks.shape
+    nvalid_w = jnp.sum(w_valid).astype(jnp.int32)
+    nconf_w = jnp.sum(jnp.where(w_valid, conf_w, 0)).astype(jnp.int32)
+    # stores of the window tier happen per device; the stores slot of the
+    # stats tuple is a count-once (replicated) entry, so pre-psum here.
+    nmatch_w = jax.lax.psum(
+        jnp.sum(jnp.where(w_valid, matched_w, 0)).astype(jnp.int32), axis_name
+    )
+    z = jnp.zeros((), jnp.int32)
+    state_psum_ints = jnp.asarray(
+        num_devices * num_rows * window, jnp.int32
+    )  # the PHASE A psum payload — O(V), no topology
+    stats0 = (z, z, z, state_psum_ints, nvalid_w,
+              2 * nvalid_w + 2 * nconf_w, z, 2 * nmatch_w, z)
+
+    if num_rounds > 0:
+        one_round, _ = _make_round_fn(
+            n=n_flat,
+            mask_len=num_boundary_padded,
+            axis_name=axis_name,
+            num_devices=num_devices,
+            vector_rounds=vector_rounds,
+            tile_size=tile_size,
+            block=block,
+        )
+        mask0 = jnp.zeros((num_boundary_padded,), jnp.bool_)
+        empty = jnp.full((block,), -1, jnp.int32)
+        carry0 = (flat, mask0, empty, empty, empty, stats0)
+        carry, _ = jax.lax.scan(
+            one_round, carry0, (bu_blocks, bv_blocks, bi_blocks)
+        )
+        carry, _ = jax.lax.scan(
+            one_round, carry, _drain_blocks(drain_rounds, block)
+        )
+        flat, bmask, ru, _, _, stats = carry
+    else:
+        bmask = jnp.zeros((num_boundary_padded,), jnp.bool_)
+        ru = jnp.full((1,), -1, jnp.int32)
+        stats = stats0
+
+    stats_out = _aggregate_stats(stats, ru, axis_name)
+    matched_out = jnp.where(w_valid, matched_w, 0).astype(jnp.int32)
+    return (
+        flat,
+        matched_out.reshape((1,) + matched_out.shape),
+        bmask,
+        stats_out,
+    )
+
+
+@lru_cache(maxsize=32)
+def _compiled_dispersed(
+    mesh, axis_name, num_devices, num_vertices, num_edges_padded,
+    vector_rounds, tile_size, drain_rounds,
+):
+    """One compiled shard_map per static config — rebuilding shard_map+jit
+    per call would retrace/recompile every time (~100x the actual run time
+    on the bench graphs). Mesh is hashable and participates in the key."""
+    fn = partial(
+        dispersed_skipper_fn,
+        num_vertices=num_vertices,
+        num_edges_padded=num_edges_padded,
+        axis_name=axis_name,
+        num_devices=num_devices,
+        vector_rounds=vector_rounds,
+        tile_size=tile_size,
+        drain_rounds=drain_rounds,
+    )
+    shard = compat.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
+        out_specs=(P(None), P(None), (P(),) * 10),
+        check_vma=False,
+    )
+    return jax.jit(shard)
+
+
+@lru_cache(maxsize=32)
+def _compiled_sharded(
+    mesh, axis_name, num_devices, window, tiles_per_window, tile_size,
+    num_rows, num_windows, num_boundary_padded, vector_rounds, drain_rounds,
+    backend, interpret,
+):
+    """Compiled locality-sharded body per static schedule shape (the
+    schedule ARRAYS are runtime inputs, including window_ids)."""
+    fn = partial(
+        locality_sharded_fn,
+        window=window,
+        tiles_per_window=tiles_per_window,
+        tile_size=tile_size,
+        num_rows=num_rows,
+        num_windows=num_windows,
+        num_boundary_padded=num_boundary_padded,
+        axis_name=axis_name,
+        num_devices=num_devices,
+        vector_rounds=vector_rounds,
+        drain_rounds=drain_rounds,
+        backend=backend,
+        interpret=interpret,
+    )
+    shard = compat.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(axis_name),) * 6 + (P(None),),
+        out_specs=(P(None), P(axis_name), P(None), (P(),) * 10),
+        check_vma=False,
+    )
+    return jax.jit(shard)
+
+
+def _mesh_and_devices(mesh: Optional[Mesh], axis_name: str):
     if mesh is None:
         devs = jax.devices()
         mesh = compat.make_mesh((len(devs),), (axis_name,))
@@ -224,7 +494,153 @@ def distributed_skipper(
         num_devices = mesh.shape[axis_name]
     else:  # pragma: no cover
         num_devices = dict(zip(mesh.axis_names, mesh.shape))[axis_name]
+    return mesh, num_devices
 
+
+def _finalize(mask, state, stats, check):
+    """Shared host-level epilogue: counters, stats, invariant enforcement."""
+    props, req, ovf, und, gints, reads, l_loc, l_rep, s_rep, wins = stats
+    n_match = jnp.sum(mask)
+    lost = props - wins  # proposals that did not win the replay
+    counters = Counters(
+        edge_reads=reads.astype(jnp.int32),
+        state_loads=(l_loc + l_rep).astype(jnp.int32),
+        state_stores=s_rep.astype(jnp.int32),
+        rounds=jnp.asarray(1, jnp.int32),
+    )
+    result = MatchResult(match_mask=mask, state=state, counters=counters)
+    dstats = DistStats(
+        proposals=props,
+        lost_proposals=lost,
+        requeued=req,
+        retry_overflow=ovf,
+        undrained=und,
+        gathered_ints=gints,
+    )
+    if check:
+        dstats.raise_if_bad()
+    return result, dstats
+
+
+def distributed_skipper(
+    edges: Optional[EdgeList] = None,
+    mesh: Optional[Mesh] = None,
+    axis_name: str = "data",
+    block_size: int = 512,
+    vector_rounds: int = 1,
+    tile_size: int = 256,
+    drain_rounds: int = 4,
+    reorder: str = "none",
+    window: Optional[int] = None,
+    schedule: Optional[WindowSchedule] = None,
+    device_schedule: Optional[DeviceSchedule] = None,
+    backend: Optional[str] = None,
+    interpret: Optional[bool] = None,
+    check: bool = True,
+) -> Tuple[MatchResult, DistStats]:
+    """Run Skipper across the devices of ``mesh`` along ``axis_name``.
+
+    Works for any device count >= 1. With the default ``reorder="none"`` /
+    ``window=None`` the raw stream is dealt in dispersed blocks (paper
+    §IV-C); passing ``reorder=`` (a ``graphs/reorder.py`` policy) and/or
+    ``window=`` switches to the locality-sharded schedule: each device's
+    intra-window edges run through the device-resident pipeline
+    (``engine.window_tier_pass`` — Pallas on TPU, its jnp twin under
+    ``backend="xla"``) with zero communication, and only the global tier
+    pays the propose/gather/replay protocol. A prebuilt ``schedule`` /
+    ``device_schedule`` skips the host precompute (benchmarks).
+
+    Results are always in the ORIGINAL edge-stream order and vertex ids; at
+    D=1 the locality-sharded output is bit-identical to
+    ``skipper_match(schedule=..., backend=...)`` (test-pinned).
+
+    ``check=True`` (default) raises ``RuntimeError`` if the run violates the
+    must-be-zero invariants (``retry_overflow``/``undrained`` — a dropped or
+    undecided edge can break maximality); ``check=False`` returns the stats
+    for the caller to inspect (``DistStats.ok``).
+    """
+    mesh, num_devices = _mesh_and_devices(mesh, axis_name)
+
+    sharded = (
+        reorder != "none"
+        or window is not None
+        or schedule is not None
+        or device_schedule is not None
+    )
+    if not sharded:
+        return _dispersed_skipper(
+            edges, mesh, axis_name, num_devices, block_size, vector_rounds,
+            tile_size, drain_rounds, check,
+        )
+
+    if device_schedule is None:
+        if schedule is None and edges is None:
+            raise ValueError("need edges or a prebuilt (device) schedule")
+        device_schedule = locality_device_schedule(
+            edges, num_devices, block_size,
+            window=window, tile_size=tile_size, reorder=reorder,
+            schedule=schedule,
+        )
+    schedule = device_schedule.schedule
+    if device_schedule.num_devices != num_devices:
+        raise ValueError(
+            f"device_schedule was partitioned for {device_schedule.num_devices} "
+            f"devices, mesh has {num_devices}"
+        )
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    slots = schedule.tiles_per_window * schedule.tile_size
+    num_rows = schedule.num_rows
+    run = _compiled_sharded(
+        mesh, axis_name, num_devices, schedule.window,
+        schedule.tiles_per_window, schedule.tile_size, num_rows,
+        schedule.num_windows, schedule.num_boundary_padded, vector_rounds,
+        drain_rounds, backend, bool(interpret),
+    )
+    flat, matched_w, bmask, stats = run(
+        jnp.asarray(device_schedule.u_rows),
+        jnp.asarray(device_schedule.v_rows),
+        jnp.asarray(device_schedule.row_slot),
+        jnp.asarray(device_schedule.boundary_ub),
+        jnp.asarray(device_schedule.boundary_vb),
+        jnp.asarray(device_schedule.boundary_ib),
+        jnp.asarray(schedule.window_ids),
+    )
+
+    # ---- host epilogue: decisions -> stream order, state -> original ids
+    # (the same [windowed ++ global ++ pad] slot layout and stream_src
+    # gather skipper_match uses)
+    slot_flat = np.where(
+        device_schedule.row_slot.reshape(-1) >= 0,
+        device_schedule.row_slot.reshape(-1),
+        num_rows,
+    )
+    dec_w = (
+        jnp.zeros((num_rows, slots), jnp.int32)
+        .at[jnp.asarray(slot_flat)]
+        .set(matched_w.reshape(-1, slots), mode="drop")
+    )
+    decisions = jnp.concatenate(
+        [dec_w.reshape(-1), bmask.astype(jnp.int32), jnp.zeros((1,), jnp.int32)]
+    )
+    mask = decisions[jnp.asarray(schedule.stream_src)] > 0
+    perm = schedule.perm
+    if perm is None:
+        perm = np.arange(schedule.num_vertices, dtype=np.int32)
+    state = flat[jnp.asarray(perm)].astype(STATE_DTYPE)
+    return _finalize(mask, state, stats, check)
+
+
+def _dispersed_skipper(
+    edges, mesh, axis_name, num_devices, block_size, vector_rounds,
+    tile_size, drain_rounds, check,
+):
+    """The raw dispersed-block deal (paper §IV-C), D >= 1."""
+    if edges is None:
+        raise ValueError("the dispersed schedule needs an edge list")
     n = edges.num_vertices
     m = edges.num_edges
     e = edges.canonical()
@@ -237,45 +653,14 @@ def distributed_skipper(
     b_ids = jnp.arange(block_size, dtype=jnp.int32)[None, None, :]
     ib = (r_ids * num_devices + d_ids) * block_size + b_ids
 
-    fn = partial(
-        distributed_skipper_fn,
-        num_vertices=n,
-        num_edges_padded=num_edges_padded,
-        axis_name=axis_name,
-        num_devices=num_devices,
-        vector_rounds=vector_rounds,
-        tile_size=tile_size,
-        drain_rounds=drain_rounds,
+    run = _compiled_dispersed(
+        mesh, axis_name, num_devices, n, num_edges_padded, vector_rounds,
+        tile_size, drain_rounds,
     )
-    shard = compat.shard_map(
-        fn,
-        mesh=mesh,
-        in_specs=(P(axis_name), P(axis_name), P(axis_name)),
-        out_specs=(P(None), P(None), (P(),) * 6),
-        check_vma=False,
-    )
-    state, mask_padded, stats = jax.jit(shard)(ub, vb, ib)
+    state, mask_padded, stats = run(ub, vb, ib)
 
     # map padded-stream mask back to the original edge order:
     # stream position of original edge k is k (dispersed_blocks keeps stream
     # order: block index = k // B, position = k % B)
     mask = mask_padded[:m]
-    props, _, req, ovf, und, gints = stats
-    n_match = jnp.sum(mask)
-    lost = props - n_match  # proposals that did not win the replay
-    counters = Counters(
-        edge_reads=jnp.asarray(m, jnp.int32),
-        state_loads=jnp.asarray(2 * m, jnp.int32) + 2 * req,
-        state_stores=2 * n_match.astype(jnp.int32),
-        rounds=jnp.asarray(1, jnp.int32),
-    )
-    result = MatchResult(match_mask=mask, state=state, counters=counters)
-    dstats = DistStats(
-        proposals=props,
-        lost_proposals=lost,
-        requeued=req,
-        retry_overflow=ovf,
-        undrained=und,
-        gathered_ints=gints,
-    )
-    return result, dstats
+    return _finalize(mask, state, stats, check)

@@ -51,6 +51,13 @@ drivers:
 * ``tile_pass`` — the full jnp tile pass (rounds + exact fallback) consumed
   by the single-device and distributed matchers and by the device-resident
   pipeline's boundary epilogue.
+* ``window_tier_pass`` — the shared *window tier* entry point: runs a
+  ``[num_rows, tiles_per_window * tile_size]`` window-local schedule slab
+  through the device-resident pipeline — the Pallas 2-D-grid kernel
+  (``backend="pallas"``) or its bit-identical jnp twin (``"xla"``). Both
+  ``kernels/skipper_match/ops.skipper_match`` and the distributed
+  matcher's per-device LOCAL PASS (``core/distributed.py``) consume this
+  one function, so the two matchers cannot drift.
 
 State encoding is the paper's: ACC=0, MCHD=2 (comparisons below use plain
 ints so they work for the uint8 at-rest array and the int32 VMEM window
@@ -353,3 +360,55 @@ def tile_pass(
         state, u, v, valid, matched, blocked_fn, gather=gather, scatter=scatter
     )
     return state, matched, conflicts, taken
+
+
+def window_tier_pass(
+    u_rows: jax.Array,   # int32[num_rows, tiles_per_window * tile_size]
+    v_rows: jax.Array,   # window-LOCAL ids, -1 padding
+    *,
+    window: int,
+    tiles_per_window: int,
+    tile_size: int,
+    vector_rounds: int,
+    backend: str,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Run the window tier of a two-tier schedule: each row is one window's
+    dispersed tile stream, matched from an all-ACC window-local state.
+
+    This is the single entry point the device-resident pipeline
+    (``kernels/skipper_match/ops.skipper_match``) and the distributed
+    matcher's per-device LOCAL PASS share. ``backend="pallas"`` launches the
+    2-D-grid revolving-VMEM kernel (``build_pipeline_matcher``);
+    ``backend="xla"`` runs the bit-identical jnp twin
+    (``ref.make_ref_pipeline`` — a flat scan in the exact grid order, uint8
+    state). Imports are deferred: the kernel modules themselves import this
+    module.
+
+    Returns ``(states, matched, conflicts)`` with ``states`` of shape
+    ``[num_rows, window]`` (int32 on the pallas path, uint8 on xla — values
+    identical) and ``matched``/``conflicts`` int32 of ``u_rows``'s shape.
+    """
+    num_rows = u_rows.shape[0]
+    if backend == "pallas":
+        from repro.kernels.skipper_match.kernel import build_pipeline_matcher
+
+        call = build_pipeline_matcher(
+            num_rows, tiles_per_window, tile_size, window,
+            vector_rounds, True, interpret,
+        )
+        state0 = jnp.zeros((num_rows, window), jnp.int32)
+        states, matched, conflicts = call(u_rows, v_rows, state0)
+    elif backend == "xla":
+        from repro.kernels.skipper_match.ref import make_ref_pipeline
+
+        run = make_ref_pipeline(window, vector_rounds)
+        states, matched, conflicts = run(
+            u_rows.reshape(num_rows, tiles_per_window, tile_size),
+            v_rows.reshape(num_rows, tiles_per_window, tile_size),
+        )
+        matched = matched.reshape(u_rows.shape)
+        conflicts = conflicts.reshape(u_rows.shape)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return states, matched, conflicts

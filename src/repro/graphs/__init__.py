@@ -17,7 +17,14 @@ from repro.graphs.generators import (
     path_graph,
 )
 from repro.graphs.csr import edges_to_csr, symmetrize, dedup_edges
-from repro.graphs.partition import dispersed_blocks, pad_edges, contiguous_chunks
+from repro.graphs.partition import (
+    DeviceSchedule,
+    contiguous_chunks,
+    dispersed_blocks,
+    locality_device_schedule,
+    pad_edges,
+    partition_schedule,
+)
 from repro.graphs.reorder import (
     Reordering,
     intra_window_fraction,
@@ -38,8 +45,11 @@ __all__ = [
     "edges_to_csr",
     "symmetrize",
     "dedup_edges",
+    "DeviceSchedule",
     "dispersed_blocks",
+    "locality_device_schedule",
     "pad_edges",
+    "partition_schedule",
     "contiguous_chunks",
     "Reordering",
     "reorder_vertices",

@@ -1,4 +1,4 @@
-"""Thread-dispersed locality-preserving edge scheduling (paper §IV-C).
+"""Thread-dispersed and locality-sharded edge scheduling (paper §IV-C).
 
 The paper divides the edge stream into blocks of ~equal size and deals them to
 threads round-robin: thread t gets blocks t, t+T, t+2T, ... so that (i) each
@@ -11,15 +11,31 @@ list into [num_devices, num_rounds, block_size] so that round r of device d is
 block ``r * D + d`` of the original stream — the exact round-robin deal. The
 distributed matcher (core/distributed.py) then scans rounds with devices in
 lockstep.
+
+``partition_schedule`` is the *locality-sharded* deal: instead of raw stream
+blocks it partitions a two-tier ``WindowSchedule`` (optionally built behind a
+``graphs/reorder.py`` renumbering) across devices. Windows are disjoint
+vertex-id ranges, so each device resolves its windows entirely locally — no
+proposals, no replay, zero collective payload — through the device-resident
+pipeline; only the global tier (cross-window + coalesced sparse-window edges)
+still needs the propose/gather/replay protocol, and it is dealt round-robin
+exactly like ``dispersed_blocks``. Birn et al. (*Efficient Parallel and
+External Matching*) motivate exactly this: locality-preserving edge placement
+is what makes block-parallel greedy matching scale. The schedule's
+``perm``/``inv`` and ``stream_src`` ride along so the distributed driver
+returns masks in original stream order and states in original vertex ids.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.graphs.types import EdgeList, INVALID
+from repro.graphs.windows import WindowSchedule, build_window_schedule
 
 
 def pad_edges(edges: EdgeList, multiple: int) -> EdgeList:
@@ -35,15 +51,33 @@ def pad_edges(edges: EdgeList, multiple: int) -> EdgeList:
 
 
 def dispersed_blocks(
-    edges: EdgeList, num_devices: int, block_size: int
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    edges: EdgeList,
+    num_devices: int,
+    block_size: int,
+    reorder: str = "none",
+    window: Optional[int] = None,
+    tile_size: int = 256,
+):
     """Deal edge blocks round-robin to devices.
 
     Returns (u_blocks, v_blocks) of shape [num_devices, num_rounds, block_size]
     where blocks are assigned ``block_index % num_devices -> device`` — the
     paper's contiguous deal: device d holds blocks d, d+D, d+2D, ...
     (equivalently: round r of device d is original block r*D + d).
+
+    Passing ``reorder=`` (a ``graphs/reorder.py`` policy) and/or ``window=``
+    switches to the *locality-sharded* mode: the edges are renumbered,
+    bucketed into a two-tier ``WindowSchedule``, and partitioned so each
+    device's round is dominated by intra-window edges it can resolve with
+    zero communication. That mode returns a :class:`DeviceSchedule` (which
+    carries the perm/inv + stream-index round-trip) instead of the raw block
+    pair — see :func:`partition_schedule` for the layout.
     """
+    if reorder != "none" or window is not None:
+        return locality_device_schedule(
+            edges, num_devices, block_size,
+            window=window, tile_size=tile_size, reorder=reorder,
+        )
     padded = pad_edges(edges, num_devices * block_size)
     total = padded.num_edges
     num_blocks = total // block_size
@@ -53,6 +87,153 @@ def dispersed_blocks(
     vb = padded.v.reshape(num_rounds, num_devices, block_size)
     # -> [num_devices, num_rounds, block_size]
     return jnp.swapaxes(ub, 0, 1), jnp.swapaxes(vb, 0, 1)
+
+
+def locality_device_schedule(
+    edges: EdgeList,
+    num_devices: int,
+    block_size: int,
+    *,
+    window: Optional[int] = None,
+    tile_size: int = 256,
+    reorder: str = "none",
+    schedule: Optional["WindowSchedule"] = None,
+) -> "DeviceSchedule":
+    """Build (or take) a two-tier window schedule and partition it across
+    devices — the one place the locality-sharded mode builds schedules on a
+    caller's behalf (``dispersed_blocks(reorder=...)`` and
+    ``distributed_skipper`` both route through here). ``window=None``
+    defers to ``build_window_schedule``'s own default."""
+    if schedule is None:
+        kwargs = {} if window is None else {"window": window}
+        schedule = build_window_schedule(
+            edges, tile_size=tile_size, reorder=reorder, **kwargs
+        )
+    return partition_schedule(schedule, num_devices, block_size)
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSchedule:
+    """Locality-sharded deal of a :class:`WindowSchedule` across devices.
+
+    The window tier: schedule rows (dense windows) are dealt whole to devices
+    with an LPT greedy (descending edge count -> least-loaded device), padded
+    to ``rows_per_device`` with empty (-1) rows. Windows are disjoint vertex
+    ranges, so a device resolves its rows with no communication, and the
+    result per row is independent of WHICH device ran it (tests pin this).
+
+    The global tier: the schedule's boundary stream (renumbered GLOBAL ids,
+    stream order) dealt round-robin into [num_devices, num_rounds,
+    block_size] blocks exactly like ``dispersed_blocks``; at D=1 this
+    degenerates to the stream in order, which keeps the single-device
+    distributed run bit-identical to ``skipper_match`` on the same schedule.
+
+    All arrays are host numpy; the driver moves them to device at trace time.
+    """
+
+    schedule: WindowSchedule
+    num_devices: int
+    block_size: int
+    u_rows: np.ndarray     # int32[D, rows_per_device, tpw * tile], local ids
+    v_rows: np.ndarray
+    row_slot: np.ndarray   # int32[D, rows_per_device] schedule-row idx, -1 pad
+    boundary_ub: np.ndarray  # int32[D, R, B] global-tier deal, global ids
+    boundary_vb: np.ndarray
+    boundary_ib: np.ndarray  # int32[D, R, B] boundary stream position, -1 pad
+
+    @property
+    def rows_per_device(self) -> int:
+        return int(self.u_rows.shape[1])
+
+    @property
+    def num_rounds(self) -> int:
+        return int(self.boundary_ub.shape[1])
+
+    @property
+    def intra_fraction(self) -> float:
+        return self.schedule.intra_fraction
+
+    @property
+    def windowed_fraction(self) -> float:
+        return self.schedule.windowed_fraction
+
+    @property
+    def window_balance(self) -> float:
+        """max/mean windowed edges per device (1.0 = perfectly balanced)."""
+        per_dev = (self.u_rows >= 0).sum(axis=(1, 2))
+        mean = per_dev.mean()
+        return float(per_dev.max() / mean) if mean else 1.0
+
+
+def partition_schedule(
+    schedule: WindowSchedule, num_devices: int, block_size: int
+) -> DeviceSchedule:
+    """Deal a two-tier window schedule to devices (see DeviceSchedule).
+
+    ``block_size`` must be a multiple of the schedule's ``tile_size`` so the
+    global-tier slab tiles of every device line up with the boundary
+    epilogue's tiles (that alignment is what makes D=1 bit-identical to
+    ``skipper_match``).
+    """
+    if block_size % schedule.tile_size != 0:
+        raise ValueError(
+            f"block_size {block_size} must be a multiple of tile_size "
+            f"{schedule.tile_size} (slab tiles must align with the boundary "
+            "epilogue's)"
+        )
+    d = int(num_devices)
+    num_rows = schedule.num_rows
+    slots = schedule.tiles_per_window * schedule.tile_size
+
+    # --- window tier: LPT deal of rows by valid-edge count ---------------
+    counts = (schedule.edge_index >= 0).sum(axis=1)
+    order = np.argsort(-counts, kind="stable")
+    loads = np.zeros(d, np.int64)
+    rows_of = [[] for _ in range(d)]
+    for r in order:
+        dev = int(np.argmin(loads))  # ties -> lowest device id
+        rows_of[dev].append(int(r))
+        loads[dev] += int(counts[r])
+    rows_per_device = max(1, max(len(rs) for rs in rows_of))
+    u_rows = np.full((d, rows_per_device, slots), -1, np.int32)
+    v_rows = np.full((d, rows_per_device, slots), -1, np.int32)
+    row_slot = np.full((d, rows_per_device), -1, np.int32)
+    for dev, rs in enumerate(rows_of):
+        rs = sorted(rs)  # ascending schedule-row order within a device
+        if rs:
+            row_slot[dev, : len(rs)] = rs
+            u_rows[dev, : len(rs)] = schedule.u_tiles[rs]
+            v_rows[dev, : len(rs)] = schedule.v_tiles[rs]
+
+    # --- global tier: round-robin block deal of the boundary stream ------
+    nb_pad = schedule.num_boundary_padded
+    per_round = d * block_size
+    total_b = -(-max(nb_pad, 1) // per_round) * per_round if nb_pad else 0
+    bu = np.full((total_b,), -1, np.int32)
+    bv = np.full((total_b,), -1, np.int32)
+    bi = np.full((total_b,), -1, np.int32)
+    if nb_pad:
+        bu[:nb_pad] = schedule.boundary_u
+        bv[:nb_pad] = schedule.boundary_v
+        real = schedule.boundary_index >= 0
+        bi[:nb_pad] = np.where(real, np.arange(nb_pad, dtype=np.int32), -1)
+    num_rounds = total_b // per_round if nb_pad else 0
+    shape = (num_rounds, d, block_size)
+    boundary_ub = np.swapaxes(bu.reshape(shape), 0, 1)
+    boundary_vb = np.swapaxes(bv.reshape(shape), 0, 1)
+    boundary_ib = np.swapaxes(bi.reshape(shape), 0, 1)
+
+    return DeviceSchedule(
+        schedule=schedule,
+        num_devices=d,
+        block_size=block_size,
+        u_rows=u_rows,
+        v_rows=v_rows,
+        row_slot=row_slot,
+        boundary_ub=boundary_ub,
+        boundary_vb=boundary_vb,
+        boundary_ib=boundary_ib,
+    )
 
 
 def contiguous_chunks(

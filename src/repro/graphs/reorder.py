@@ -23,9 +23,12 @@ window schedule itself):
 * ``greedy`` — window-affinity clustering: seed each window with the
   highest-degree unassigned vertex, then repeatedly pull in the unassigned
   vertex with the most edges into the window under construction
-  (score+degree tie-break). Best intra fractions, costs O(V^2 / window)
-  argmax work — fine for the V <= ~10^5 graphs the benches run, not for
-  crawls; ``degree`` is the scalable default.
+  (score+degree tie-break). Best intra fractions. The selection runs on a
+  lazy-deletion max-heap of affinity-touched candidates merged with a
+  degree-order cursor for the untouched ones — O((V + E) log E) total,
+  paper-scale ready — and picks the exact vertex the old full
+  O(V^2/window) host argmax picked (``_reorder_greedy_argmax``, kept as
+  the test oracle, is pinned bit-identical on every generator family).
 
 A ``Reordering`` is a bijection old->new (``perm``) with its inverse
 (``inv``); ``windows.build_window_schedule(reorder=...)`` applies it before
@@ -123,7 +126,13 @@ def _reorder_bfs(edges: EdgeList) -> Reordering:
     return _from_inverse("bfs", inv)
 
 
-def _reorder_greedy(edges: EdgeList, window: int) -> Reordering:
+def _reorder_greedy_argmax(edges: EdgeList, window: int) -> Reordering:
+    """Reference greedy clustering: full argmax over all vertices per pick.
+
+    O(V^2/window) host work — kept ONLY as the test oracle pinning
+    :func:`_reorder_greedy`'s heap selection (bit-identical output); the
+    production path below is the scalable one.
+    """
     n = edges.num_vertices
     deg = _degrees(edges)
     starts, nbrs = _csr_neighbors(edges)
@@ -150,6 +159,94 @@ def _reorder_greedy(edges: EdgeList, window: int) -> Reordering:
             np.add.at(score, nbrs[starts[cur] : starts[cur + 1]], 1.0)
             masked = np.where(assigned, -np.inf, score + key)
             cur = int(np.argmax(masked))
+    assert pos == n
+    return _from_inverse("greedy", inv)
+
+
+def _reorder_greedy(edges: EdgeList, window: int) -> Reordering:
+    """Heap-based greedy clustering, selection-identical to the argmax
+    reference but O((V + E) log E).
+
+    The argmax over ``score + key`` decomposes into two candidate pools:
+
+    * vertices *touched* this window (``score > 0``) — kept in a
+      lazy-deletion max-heap: every score increment pushes a fresh
+      ``(-(score+key), v)`` entry; a popped entry is discarded when the
+      vertex is assigned or its stored priority no longer equals the live
+      ``score[v] + key[v]`` (per-window score resets make stale entries
+      self-invalidate the same way).
+    * *untouched* vertices (``score == 0``), whose priority is ``key``
+      alone — monotone along the degree order, so the best one is always
+      the first unassigned vertex under a monotone cursor. When that
+      vertex HAS been touched it also sits in the heap with a strictly
+      higher priority (score >= 1 > key), so skipping the untouched pool
+      behind it never changes the argmax.
+
+    Ties resolve to the smallest vertex id in both pools — exactly
+    ``np.argmax``'s first-maximum rule — so the produced ordering is
+    bit-identical to the reference (test-pinned).
+    """
+    import heapq
+
+    n = edges.num_vertices
+    deg = _degrees(edges)
+    starts_a, nbrs_a = _csr_neighbors(edges)
+    deg_order = np.argsort(-deg, kind="stable").tolist()
+    keys_np = (
+        deg.astype(np.float64) / (deg.max() + 1.0) * 0.5
+        if n
+        else deg.astype(np.float64)
+    )
+    key = keys_np.tolist()
+    starts = starts_a.tolist()
+    nbrs = nbrs_a.tolist()
+    assigned = bytearray(n)
+    score = [0.0] * n
+    inv = np.empty(n, np.int64)
+    pos = 0
+    cursor = 0  # first-unassigned pointer into deg_order (seeds AND picks)
+    num_windows = -(-n // window)
+    for _ in range(num_windows):
+        while cursor < n and assigned[deg_order[cursor]]:
+            cursor += 1
+        if cursor >= n:
+            break
+        cur = deg_order[cursor]
+        heap: list = []
+        touched: list = []
+        for _ in range(min(window, n - pos)):
+            assigned[cur] = True
+            inv[pos] = cur
+            pos += 1
+            for y in nbrs[starts[cur] : starts[cur + 1]]:
+                if assigned[y]:
+                    continue
+                s = score[y] + 1.0
+                score[y] = s
+                touched.append(y)
+                heapq.heappush(heap, (-(s + key[y]), y))
+            # best touched candidate (discard assigned/stale entries)
+            while heap:
+                p, y = heap[0]
+                if assigned[y] or -p != score[y] + key[y]:
+                    heapq.heappop(heap)
+                    continue
+                break
+            while cursor < n and assigned[deg_order[cursor]]:
+                cursor += 1
+            if cursor >= n:
+                break  # every vertex assigned — no next pick to compute
+            d = deg_order[cursor]
+            pd = score[d] + key[d]
+            if heap:
+                p, y = heap[0]
+                if (-p, -y) > (pd, -d):
+                    cur = y
+                    continue
+            cur = d
+        # reset this window's scores (touched vertices only — O(touched))
+        for y in touched:
+            score[y] = 0.0
     assert pos == n
     return _from_inverse("greedy", inv)
 

@@ -58,7 +58,13 @@ from repro.graphs.reorder import Reordering, reorder_vertices
 @dataclasses.dataclass(frozen=True)
 class WindowSchedule:
     """Static-shape device schedule for one graph. All arrays are host numpy;
-    the driver moves them to device once, at trace time."""
+    the driver moves them to device once, at trace time.
+
+    Consumed by the single-device pipeline (``kernels/skipper_match/ops``)
+    and, via ``graphs/partition.partition_schedule``, by the
+    locality-sharded distributed matcher — windows are disjoint vertex-id
+    ranges, so whole rows can be dealt to devices and resolved without
+    communication (DESIGN.md §8)."""
 
     window: int           # vertex ids per window
     tile_size: int

@@ -36,10 +36,8 @@ from repro.graphs.types import EdgeList
 from repro.graphs.windows import WindowSchedule, build_window_schedule
 from repro.kernels.skipper_match.kernel import (
     build_boundary_matcher,
-    build_pipeline_matcher,
     build_window_matcher,
 )
-from repro.kernels.skipper_match.ref import make_ref_pipeline
 
 # Incremented at TRACE time inside the pipeline body: the number of actual
 # compilations of the full-graph pipeline. Tests use it to prove the driver
@@ -113,19 +111,17 @@ def _build_pipeline(
         global _PIPELINE_TRACES
         _PIPELINE_TRACES += 1  # trace-time side effect (compilation counter)
 
-        if backend == "pallas":
-            call = build_pipeline_matcher(
-                num_rows, tiles_per_window, tile_size, window,
-                vector_rounds, True, interpret,
-            )
-            state0 = jnp.zeros((num_rows, window), jnp.int32)
-            state2, matched2, conf2 = call(u2, v2, state0)
-        else:  # "xla": the jnp twin of the identical schedule
-            run = make_ref_pipeline(window, vector_rounds)
-            state2, matched2, conf2 = run(
-                u2.reshape(num_rows, tiles_per_window, tile_size),
-                v2.reshape(num_rows, tiles_per_window, tile_size),
-            )
+        # window tier: the engine entry point shared with the distributed
+        # matcher's per-device LOCAL PASS (pallas kernel / jnp twin).
+        state2, matched2, conf2 = engine.window_tier_pass(
+            u2, v2,
+            window=window,
+            tiles_per_window=tiles_per_window,
+            tile_size=tile_size,
+            vector_rounds=vector_rounds,
+            backend=backend,
+            interpret=interpret,
+        )
 
         # Rows hold only the dense windows: scatter them into the full
         # [num_windows, window] state (coalesced windows stay all-ACC — their

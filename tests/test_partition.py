@@ -1,0 +1,151 @@
+"""Locality-sharded partitioning (graphs/partition.partition_schedule) and
+the heap-based greedy reorder.
+
+The partitioner invariants the distributed matcher relies on:
+
+* every schedule row is dealt to exactly one device (the window tier's
+  disjointness, which is what makes it communication-free);
+* the boundary stream is dealt round-robin, covering every global-tier edge
+  exactly once and — at D=1 — in stream order (the bit-identity anchor);
+* block_size must align with tile_size (slab tiles == epilogue tiles).
+
+The greedy reorder's heap selection is pinned bit-identical to the retired
+O(V^2/window) argmax reference on every generator family, and must complete
+a 10^6-vertex graph (the argmax path was quadratic: ~10^9 scalar compares
+for this input).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.graphs import (
+    DeviceSchedule,
+    build_window_schedule,
+    dispersed_blocks,
+    erdos_renyi_graph,
+    grid_graph,
+    partition_schedule,
+    path_graph,
+    rmat_graph,
+    star_graph,
+)
+from repro.graphs.reorder import (
+    _reorder_greedy,
+    _reorder_greedy_argmax,
+    intra_window_fraction,
+)
+
+GRAPHS = {
+    "rmat": rmat_graph(11, 16, seed=3),
+    "grid": grid_graph(30, 30),
+    "er": erdos_renyi_graph(2000, 8000, seed=9),
+    "star": star_graph(150),
+    "path": path_graph(501),
+}
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("num_devices", [1, 2, 4])
+def test_partition_deals_every_row_once(gname, num_devices):
+    sched = build_window_schedule(GRAPHS[gname], window=256, tile_size=64,
+                                  reorder="degree")
+    ds = partition_schedule(sched, num_devices, block_size=128)
+    slots = sched.tiles_per_window * sched.tile_size
+    dealt = ds.row_slot[ds.row_slot >= 0]
+    assert sorted(dealt.tolist()) == list(range(sched.num_rows))
+    # dealt row content matches the schedule row it claims to be
+    for d in range(num_devices):
+        for j in range(ds.rows_per_device):
+            r = int(ds.row_slot[d, j])
+            if r < 0:
+                assert (ds.u_rows[d, j] == -1).all()
+                continue
+            assert (ds.u_rows[d, j] == sched.u_tiles[r]).all()
+            assert (ds.v_rows[d, j] == sched.v_tiles[r]).all()
+    assert ds.u_rows.shape == (num_devices, ds.rows_per_device, slots)
+
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("num_devices", [1, 2, 4])
+def test_partition_boundary_round_robin_covers_stream(gname, num_devices):
+    sched = build_window_schedule(GRAPHS[gname], window=256, tile_size=64,
+                                  reorder="degree")
+    ds = partition_schedule(sched, num_devices, block_size=64)
+    nb_pad = sched.num_boundary_padded
+    # positions: every real boundary slot appears exactly once
+    pos = ds.boundary_ib[ds.boundary_ib >= 0]
+    real = np.nonzero(sched.boundary_index >= 0)[0]
+    assert sorted(pos.tolist()) == real.tolist()
+    # round-robin deal: round r of device d is stream block r*D + d
+    d_, r_, b_ = np.nonzero(ds.boundary_ib >= 0)
+    stream = (r_ * num_devices + d_) * ds.block_size + b_
+    assert (ds.boundary_ib[d_, r_, b_] == stream).all()
+    # the dealt endpoints are the schedule's boundary endpoints
+    assert (ds.boundary_ub[d_, r_, b_] == sched.boundary_u[stream]).all()
+    assert (ds.boundary_vb[d_, r_, b_] == sched.boundary_v[stream]).all()
+    if num_devices == 1 and nb_pad:
+        flat = ds.boundary_ib.reshape(-1)[:nb_pad]
+        want = np.where(sched.boundary_index >= 0,
+                        np.arange(nb_pad, dtype=np.int32), -1)
+        assert (flat == want).all()  # D=1: the stream, in order
+
+
+def test_partition_rejects_misaligned_block_size():
+    sched = build_window_schedule(GRAPHS["grid"], window=256, tile_size=64)
+    with pytest.raises(ValueError, match="multiple of tile_size"):
+        partition_schedule(sched, 2, block_size=96)
+
+
+def test_partition_balances_windowed_edges():
+    """LPT deal: no device holds more than ~the densest single row above the
+    mean (the classic LPT bound), measured on a skewed reordered RMAT."""
+    sched = build_window_schedule(rmat_graph(12, 16, seed=1), window=512,
+                                  tile_size=128, reorder="degree")
+    if sched.num_rows < 4:
+        pytest.skip("schedule coalesced to too few rows to balance")
+    ds = partition_schedule(sched, 2, block_size=128)
+    per_dev = (ds.u_rows >= 0).sum(axis=(1, 2))
+    counts = (sched.edge_index >= 0).sum(axis=1)
+    assert per_dev.max() <= per_dev.mean() + counts.max()
+    assert ds.window_balance >= 1.0
+
+
+def test_dispersed_blocks_reorder_mode_returns_device_schedule():
+    g = GRAPHS["rmat"]
+    ds = dispersed_blocks(g, 2, 256, reorder="degree", window=512)
+    assert isinstance(ds, DeviceSchedule)
+    assert ds.schedule.reorder == "degree"
+    assert ds.num_devices == 2
+    # plain mode unchanged: a (u, v) block pair
+    ub, vb = dispersed_blocks(g.canonical(), 2, 256)
+    assert ub.shape[0] == 2 and ub.shape == vb.shape
+
+
+# --- heap-based greedy reorder -------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+@pytest.mark.parametrize("window", [64, 256])
+def test_greedy_heap_matches_argmax_reference(gname, window):
+    """The production heap selection is bit-identical to the retired full
+    argmax — same ordering, not just same quality."""
+    g = GRAPHS[gname]
+    a = _reorder_greedy_argmax(g, window)
+    b = _reorder_greedy(g, window)
+    assert np.array_equal(a.inv, b.inv)
+    assert np.array_equal(a.perm, b.perm)
+
+
+def test_greedy_completes_million_vertex_graph():
+    """Acceptance: the greedy policy must feed the partitioner at paper
+    scale. 2^20 vertices / ~2.1M edges finishes in seconds on the heap path
+    (the argmax path was O(V^2/window): ~5 * 10^11 compares here)."""
+    g = grid_graph(1024, 1024)  # 2^20 vertices
+    t0 = time.time()
+    r = _reorder_greedy(g, 2048)
+    elapsed = time.time() - t0
+    assert r.num_vertices == 1024 * 1024
+    # a real permutation
+    assert np.array_equal(np.sort(r.inv), np.arange(g.num_vertices))
+    assert intra_window_fraction(g, 2048, r) > 0.5
+    assert elapsed < 120, f"heap greedy too slow: {elapsed:.0f}s"
