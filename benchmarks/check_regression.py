@@ -1,18 +1,20 @@
 """Bench-smoke regression gate (CI).
 
 Compares a freshly recorded kernel_bench JSON against the committed baseline
-and fails if any gated row (``kernel/windowed_pipeline/*`` or
-``kernel/distributed_pipeline/*``) regressed beyond the tolerance.
+and fails if any gated row (``kernel/windowed_pipeline/*``,
+``kernel/distributed_pipeline/*`` or ``kernel/bmatch/*``) regressed beyond
+the tolerance.
 
 CI runners and the recording machine differ in absolute speed, so raw
 ``us_per_call`` comparisons are meaningless across hosts. Each gated row is
-therefore NORMALIZED by a same-run sibling for the same graph (both sides
-share the engine and the host, so machine speed cancels): the windowed
-pipeline by the jnp tiled matcher, the locality-sharded distributed matcher
-by the dispersed jnp-local-pass distributed baseline (same forced-4-device
-subprocess):
+therefore NORMALIZED by a same-run sibling (both sides share the engine and
+the host, so machine speed cancels): the windowed pipeline by the jnp tiled
+matcher of the same graph, the locality-sharded distributed matcher by the
+dispersed jnp-local-pass distributed baseline (same forced-4-device
+subprocess), and the b-matching router by the same-run
+``window_match/tile128`` row (both engine-bound jnp tile passes):
 
-    ratio(run, graph) = us(gated_row/graph) / us(norm_row/graph)
+    ratio(run, row) = us(gated_row) / us(norm_row)
 
 and the gate is ``ratio_new <= ratio_baseline * (1 + tolerance)``.
 
@@ -35,15 +37,30 @@ PREFIXES = {
 INFO_PREFIXES = {
     "kernel/windowed_pipeline_noreorder/": "kernel/jnp_matcher/",
 }
+# gated prefix -> one FIXED same-run row (no per-graph suffix): every
+# kernel/bmatch/* case normalizes by the single windowed-oracle row
+FIXED_NORMS = {
+    "kernel/bmatch/": "kernel/window_match/tile128",
+}
 
 
-def _ratios(data: dict, prefixes=PREFIXES) -> dict:
+def _ratios(data: dict, prefixes=PREFIXES, fixed_norms=()) -> dict:
+    """Gated-row -> normalized-ratio map. ``prefixes`` pairs a gated prefix
+    with a same-suffix normalizer prefix; ``fixed_norms`` pairs a gated
+    prefix with ONE fixed normalizer row (pass FIXED_NORMS explicitly on
+    gating calls; informational calls leave it empty)."""
     out = {}
     for name, row in data.items():
         for prefix, norm_prefix in prefixes.items():
             if name.startswith(prefix):
                 graph = name[len(prefix):]
                 norm = data.get(norm_prefix + graph)
+                if norm is None:
+                    continue
+                out[name] = row["us_per_call"] / norm["us_per_call"]
+        for prefix, norm_name in dict(fixed_norms).items():
+            if name.startswith(prefix):
+                norm = data.get(norm_name)
                 if norm is None:
                     continue
                 out[name] = row["us_per_call"] / norm["us_per_call"]
@@ -62,8 +79,8 @@ def main() -> int:
         new_data = json.load(f)
     with open(args.baseline_json) as f:
         base_data = json.load(f)
-    new = _ratios(new_data)
-    base = _ratios(base_data)
+    new = _ratios(new_data, fixed_norms=FIXED_NORMS)
+    base = _ratios(base_data, fixed_norms=FIXED_NORMS)
 
     info_base = _ratios(base_data, INFO_PREFIXES)
     for name, r in sorted(_ratios(new_data, INFO_PREFIXES).items()):

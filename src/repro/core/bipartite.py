@@ -1,22 +1,23 @@
 """Capacity-constrained bipartite b-matching — the Skipper technique applied
-to MoE token-expert assignment (first-class framework integration, DESIGN §3).
+to MoE token-expert assignment (first-class framework integration, DESIGN.md
+§3, §9).
 
 Problem: tokens x experts, candidate edges (t, e) with router scores; each
 token may take at most ``token_budget`` experts, each expert at most
 ``expert_capacity`` tokens. A maximal b-matching over the score-sorted edge
 stream is the single-pass analogue of auction/Sinkhorn routing.
 
-Algorithm = Skipper's tiled first-claim pass generalized to capacities:
-
-  per tile (vectorized):
-    expert side: prefix-count of same-expert claims inside the tile via a
-        one-hot cumsum (experts are few, so the T x E one-hot is cheap — on
-        TPU this is an MXU matmul);
-    token side:  an edge is *clean* iff no earlier in-tile edge claims the
-        same token (first-claim, same triangular mask as unipartite Skipper);
-    commit = clean & token-budget-left & expert-capacity-left-after-prefix.
-  Dirty edges (second+ in-tile claim on one token) retry in the next unrolled
-  round — the JIT conflict path. Every edge is decided in its own tile.
+Since PR 4 this module is a THIN ADAPTER over the shared claim engine: the
+round/fallback machinery lives in ``core/engine.py`` (the capacitated
+first-K-claim generalization — ``tile_pass_capacitated`` built on
+``run_first_claim_rounds`` / ``greedy_fallback_rounds``), so the b-matching
+inherits every engine speedup (per-side blocked implementations, future
+Pallas tiling) for free, and its output is *exactly* the sequential greedy
+over the score-sorted stream: accept each edge iff, at its stream position,
+its token still has budget and its expert still has capacity (test-pinned
+against a numpy oracle). The previous private implementation's one-commit-
+per-token-per-round rule and vmap-degrading ``lax.cond`` + ``lax.scan``
+fallback (the same pathology PR 2 removed from the engine) are gone.
 
 Work: O(#candidate edges), one pass, no iteration over the token set — the
 same work-efficiency story the paper tells for graphs.
@@ -24,54 +25,27 @@ same work-efficiency story the paper tells for graphs.
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Dict, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 
-def _tile_round(
-    tok: jax.Array,          # int32[T] token ids (already -1 for invalid)
-    exp: jax.Array,          # int32[T] expert ids
-    undecided: jax.Array,    # bool[T]
-    token_used: jax.Array,   # int32[num_tokens]
-    expert_used: jax.Array,  # int32[num_experts]
-    token_budget: int,
-    expert_capacity: int,
-    num_experts: int,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    t = tok.shape[0]
-    num_tokens = token_used.shape[0]
-    valid = (tok >= 0) & undecided
-
-    tok_left = token_used[jnp.where(valid, tok, 0)] < token_budget
-    exp_left = expert_used[jnp.where(valid, exp, 0)] < expert_capacity
-    # dead edges are decided now (token budget exhausted or expert full)
-    dead = valid & (~tok_left | ~exp_left)
-    free = valid & tok_left & exp_left
-
-    # token first-claim (triangular conflict mask over the tile)
-    same_tok = (tok[:, None] == tok[None, :]) & jnp.tril(
-        jnp.ones((t, t), jnp.bool_), k=-1
-    )
-    blocked_tok = jnp.any(same_tok & free[None, :], axis=1) & free
-
-    # expert prefix count inside the tile (one-hot cumsum; MXU-sized)
-    onehot = jax.nn.one_hot(
-        jnp.where(free & ~blocked_tok, exp, num_experts),
-        num_experts + 1,
-        dtype=jnp.int32,
-    )[:, :num_experts]
-    prefix = jnp.cumsum(onehot, axis=0) - onehot  # exclusive prefix
-    exp_prefix = jnp.sum(prefix * onehot, axis=1)
-    exp_room = expert_used[jnp.where(valid, exp, 0)] + exp_prefix < expert_capacity
-
-    commit = free & ~blocked_tok & exp_room
-    over = free & ~blocked_tok & ~exp_room  # expert filled within this tile -> dead
-    token_used = token_used.at[jnp.where(commit, tok, num_tokens)].add(1, mode="drop")
-    expert_used = expert_used.at[jnp.where(commit, exp, num_experts)].add(1, mode="drop")
-    undecided = undecided & ~(commit | dead | over)
-    return commit, undecided, token_used, expert_used
+# Default unrolled rounds per tile. NOT a correctness knob (the engine's
+# exact fallback reaches the sequential-greedy fixpoint from any unroll
+# depth — rounds-invariance is test-pinned), but unlike the unipartite
+# matchers the capacitated default is 2, not 1: the score-sorted MoE stream
+# is *structurally* contended — hot experts draw claimants until they fill,
+# and a token's budget-k candidates land in the same tile — so round-2 work
+# is common rather than Θ(λ²)-rare. Round 1 commits each vertex's first
+# `room` claims; round 2 retires the cross-side chains that round 1's
+# commits unblock (see DESIGN.md §9). With vector_rounds=1 those chains fall
+# into the while_loop fallback, which under vmap (the MoE router vmaps
+# groups) costs every group the batch-max iteration count;
+# tests/test_bipartite.py::test_rounds_sensitivity pins both the invariance
+# and the round-2 economics.
+BMATCH_VECTOR_ROUNDS = 2
 
 
 @partial(
@@ -83,6 +57,8 @@ def _tile_round(
         "expert_capacity",
         "tile_size",
         "vector_rounds",
+        "conflict_method",
+        "with_stats",
     ),
 )
 def bmatch_assign(
@@ -94,67 +70,60 @@ def bmatch_assign(
     token_budget: int,
     expert_capacity: int,
     tile_size: int = 1024,
-    vector_rounds: int = 3,
-) -> jax.Array:
+    vector_rounds: int = BMATCH_VECTOR_ROUNDS,
+    conflict_method: str = "auto",
+    with_stats: bool = False,
+) -> Union[jax.Array, Tuple[jax.Array, Dict[str, jax.Array]]]:
     """Greedy maximal b-matching over a (pre-sorted) candidate edge stream.
 
     token_ids/expert_ids: int32[M] candidate edges, highest score first;
-    invalid candidates marked token_id = -1. Returns bool[M] accept mask.
+    invalid candidates marked token_id = -1. Returns bool[M] accept mask —
+    exactly the sequential greedy: edge i is accepted iff at stream position
+    i its token has budget left and its expert has capacity left.
+
+    The work is ``engine.tile_pass_capacitated`` scanned over
+    ``tile_size``-edge tiles with the per-side used counts as carry
+    (DESIGN.md §9); ``conflict_method`` is forwarded to the engine's
+    per-side rank implementations (``"auto"`` picks the one-hot prefix for
+    the expert side and claim-sort for the token side at typical sizes —
+    never changes output).
+
+    ``with_stats=True`` additionally returns
+    ``{"conflicts": int32, "fallback_tiles": int32}`` — total blocked-round
+    count (Table II analogue) and how many tiles entered the exact
+    while_loop fallback (the rounds-sensitivity instrumentation).
     """
     m = token_ids.shape[0]
     pad = (-m) % tile_size
-    tok = jnp.concatenate([token_ids, jnp.full((pad,), -1, jnp.int32)])
-    exp = jnp.concatenate([expert_ids, jnp.zeros((pad,), jnp.int32)])
+    tok = jnp.concatenate(
+        [token_ids.astype(jnp.int32), jnp.full((pad,), -1, jnp.int32)]
+    )
+    exp = jnp.concatenate(
+        [expert_ids.astype(jnp.int32), jnp.zeros((pad,), jnp.int32)]
+    )
     num_tiles = tok.shape[0] // tile_size
     tok = tok.reshape(num_tiles, tile_size)
     exp = exp.reshape(num_tiles, tile_size)
 
     def tile_step(carry, te):
-        token_used, expert_used = carry
-        t_ids, e_ids = te
-        undecided = jnp.ones((tile_size,), jnp.bool_)
-        matched = jnp.zeros((tile_size,), jnp.bool_)
-        for _ in range(vector_rounds):
-            commit, undecided, token_used, expert_used = _tile_round(
-                t_ids, e_ids, undecided, token_used, expert_used,
-                token_budget, expert_capacity, num_experts,
-            )
-            matched = matched | commit
-
-        # sequential fallback for still-undecided edges (token appeared >
-        # vector_rounds times in one tile)
-        def fallback(args):
-            token_used, expert_used, matched = args
-
-            def fstep(c, te_u):
-                tu, eu, mm_prev = c
-                tt, ee, und = te_u
-                ok = und & (tt >= 0)
-                take = (
-                    ok
-                    & (tu[jnp.where(ok, tt, 0)] < token_budget)
-                    & (eu[jnp.where(ok, ee, 0)] < expert_capacity)
-                )
-                tu = tu.at[jnp.where(take, tt, num_tokens)].add(1, mode="drop")
-                eu = eu.at[jnp.where(take, ee, num_experts)].add(1, mode="drop")
-                return (tu, eu, mm_prev), take
-
-            (token_used, expert_used, _), extra = jax.lax.scan(
-                fstep, (token_used, expert_used, matched), (t_ids, e_ids, undecided)
-            )
-            return token_used, expert_used, matched | extra
-
-        token_used, expert_used, matched = jax.lax.cond(
-            jnp.any(undecided),
-            fallback,
-            lambda args: args,
-            (token_used, expert_used, matched),
+        used_t, used_e = carry
+        (used_t, used_e), matched, conflicts, fb = engine.tile_pass_capacitated(
+            used_t, used_e, te[0], te[1],
+            cap_u=token_budget, cap_v=expert_capacity,
+            vector_rounds=vector_rounds, conflict_method=conflict_method,
         )
-        return (token_used, expert_used), matched
+        return (used_t, used_e), (matched, conflicts, fb)
 
     carry0 = (
         jnp.zeros((num_tokens,), jnp.int32),
         jnp.zeros((num_experts,), jnp.int32),
     )
-    _, matched = jax.lax.scan(tile_step, carry0, (tok, exp))
-    return matched.reshape(-1)[:m]
+    _, (matched, conflicts, fb) = jax.lax.scan(tile_step, carry0, (tok, exp))
+    accept = matched.reshape(-1)[:m]
+    if with_stats:
+        stats = {
+            "conflicts": jnp.sum(conflicts).astype(jnp.int32),
+            "fallback_tiles": jnp.sum(fb.astype(jnp.int32)),
+        }
+        return accept, stats
+    return accept

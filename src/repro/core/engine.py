@@ -17,9 +17,17 @@ of T edges:
     blocked_i = exists j < i in the tile: free_j and edges i, j share an endpoint
     commit_i  = free_i and not blocked_i      # mutually endpoint-disjoint!
 
+Since PR 4 the same invariant also exists in a *capacitated* form: the
+first-K-claim round (``first_k_claim_commit`` + the ``ranks_*`` builders +
+``tile_pass_capacitated``), which generalizes the reservation step to
+per-side budgets (MoE token budgets / expert capacities — consumed by
+``core/bipartite.bmatch_assign``) and degenerates bit-identically to the
+unit-capacity rule at cap = 1. See DESIGN.md §9 and the section comment
+above ``first_k_claim_commit``.
+
 This module owns the pieces that must never drift between matchers. The
-``blocked`` predicate has TWO interchangeable implementations computing the
-exact same function (tests pin bit-equality across them):
+``blocked`` predicate has THREE interchangeable implementations computing
+the exact same function (tests pin bit-equality across them):
 
 * ``share_matrix`` + ``blocked_from_matrix`` — the triangular
   endpoint-sharing (JIT-conflict) matrix, O(T^2) VPU compares. Built with
@@ -31,6 +39,9 @@ exact same function (tests pin bit-equality across them):
   j < i claims one of its endpoints, i.e. ``min(claimant(u_i),
   claimant(v_i)) < i``. O(T log T) — the CPU/XLA twin's hot-path version
   (~2.5x end-to-end on the jnp matchers, measured rmat14).
+* ``blocked_by_claim_scatter`` — the same claimant function via scatter-min
+  into a vertex-indexed [n] claim array; wins when n is small relative to
+  the tile (window-local tiles).
 
 ``first_claim_commit`` turns gathered endpoint states plus a blocked
 predicate into one round's commit/blocked decision. On top sit the standard
@@ -65,7 +76,7 @@ alike).
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +88,11 @@ MCHD = 2
 def share_matrix(u: jax.Array, v: jax.Array, valid: jax.Array) -> jax.Array:
     """conflict[i, j] = True iff j < i, both valid, and edges i, j share an
     endpoint. TPU-safe: strictly-lower-triangular mask via 2-D iota (Pallas
-    TPU requires >= 2-D iota; XLA lowers it identically)."""
+    TPU requires >= 2-D iota; XLA lowers it identically).
+
+    Args: u/v int32[T] endpoint ids, valid bool[T]. Returns bool[T, T].
+    This is the JIT-conflict matrix of DESIGN.md §2 level 0; build it once
+    per tile — it is free-mask independent and reused by every round."""
     t = u.shape[0]
     share = (
         (u[:, None] == u[None, :])
@@ -95,7 +110,14 @@ def blocked_from_matrix(conflict: jax.Array) -> Callable[[jax.Array], jax.Array]
     """``blocked`` predicate from a precomputed ``share_matrix``: edge i is
     blocked iff some FREE j < i shares an endpoint. O(T^2) VPU compares —
     the Pallas kernel's version (T x T ops are native on the VPU and the
-    matrix is built once per tile)."""
+    matrix is built once per tile).
+
+    Returns ``blocked_fn(free bool[T]) -> bool[T]`` for
+    :func:`first_claim_commit` / :func:`run_first_claim_rounds`. Invariant
+    (shared by all three builders, DESIGN.md §3 "Blocked-predicate
+    implementations"): ``blocked_fn(free)[i]`` is True iff ``free[i]`` and
+    some free ``j < i`` shares an endpoint with edge i — so the returned
+    mask is always a subset of ``free``."""
 
     def blocked_fn(free):
         return jnp.any(conflict & free[None, :], axis=1) & free
@@ -123,6 +145,10 @@ def blocked_by_claim_sort(
     Requires ``(n + 1) * (T + 1) < 2^31`` (int32 composite key; e.g. n <=
     8M vertices at T = 256) — checked at trace time (a hard raise, not an
     assert: overflow would silently decode wrong claimants under ``-O``).
+
+    Args: u/v int32[T], valid bool[T], n = number of vertices. Returns the
+    same ``blocked_fn`` contract as :func:`blocked_from_matrix` (DESIGN.md
+    §3 "Blocked-predicate implementations").
     """
     t = u.shape[0]
     if (n + 1) * (t + 1) >= 2**31:
@@ -166,6 +192,9 @@ def blocked_by_claim_scatter(
     gather, so it wins when ``n`` is small relative to the tile (the
     window-local tier: ids < window); the sort version wins for
     full-graph-state tiles where the per-round init would dominate.
+
+    Args and contract as :func:`blocked_by_claim_sort` (DESIGN.md §3
+    "Blocked-predicate implementations").
     """
     t = u.shape[0]
     idx = jnp.arange(t, dtype=jnp.int32)
@@ -201,6 +230,212 @@ def first_claim_commit(
     return commit, blocked
 
 
+# ---------------------------------------------------------------------------
+# Capacitated generalization: first-K-claim rounds (DESIGN.md §9).
+#
+# The unit-capacity invariant above is the special case cap = 1 of a
+# *capacitated* claim rule over two independent id spaces (u-side / v-side,
+# e.g. MoE tokens / experts) with per-side budgets:
+#
+#     room_s(w)  = cap_s - used_s[w]                      (remaining slots)
+#     free_i     = valid, undecided, room > 0 on BOTH sides
+#     rank_s(i)  = #{ free j < i : side-s id of j == side-s id of i }
+#     blocked_i  = rank_u(i) >= room_u(u_i)  or  rank_v(i) >= room_v(v_i)
+#     commit_i   = free_i and not blocked_i
+#
+# rank counts ALL free earlier claimants — including ones that are
+# themselves blocked on their other side — so claims cascade exactly as in
+# the unit-capacity blocked predicate and the fixpoint of iterated rounds is
+# the sequential index-order greedy (greedy_fallback_rounds' proof carries
+# over verbatim). With cap_u = cap_v = 1 and disjoint id spaces,
+# rank >= room degenerates to "some free j < i claims my endpoint" — the
+# paper's reservation step — and the round is bit-identical to
+# first_claim_commit (test-pinned, tests/test_bipartite.py).
+#
+# Like the unit predicate, rank has three interchangeable implementations
+# (identical function, picked per side by cost): the triangular same-id
+# matrix (O(T^2) VPU/MXU — the TPU-native form), the per-side claim sort
+# (one sort per tile, O(T) per round), and the vertex-indexed one-hot prefix
+# (O(T*n) per round — wins when the side's id space is tiny, e.g. experts).
+# ---------------------------------------------------------------------------
+
+
+def first_k_claim_commit(
+    used_u: jax.Array,
+    used_v: jax.Array,
+    valid: jax.Array,
+    matched: jax.Array,
+    rank_fn: Callable[[jax.Array], Tuple[jax.Array, jax.Array]],
+    cap_u: int,
+    cap_v: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """One capacitated first-claim round (DESIGN.md §9).
+
+    Args:
+        used_u, used_v: int32[T] *gathered per-edge* used counts —
+            ``used_u_state[u]``, ``used_v_state[v]``.
+        valid, matched: bool[T] as in :func:`first_claim_commit`.
+        rank_fn: per-side free-claimant ranks, from
+            :func:`capacitated_rank_fn` or one of the ``ranks_*`` builders.
+        cap_u, cap_v: static per-side budgets (e.g. ``token_budget``,
+            ``expert_capacity``).
+
+    Returns:
+        ``(commit, blocked)``. Committed edges never oversubscribe a vertex:
+        within one round the commits on any vertex are exactly the free
+        claimants with rank < room, so at most ``room`` many. An edge with a
+        full endpoint is not free and simply stays unmatched (dead) — no
+        explicit kill list is needed.
+    """
+    room_u = cap_u - used_u.astype(jnp.int32)
+    room_v = cap_v - used_v.astype(jnp.int32)
+    free = valid & (~matched) & (room_u > 0) & (room_v > 0)
+    rank_u, rank_v = rank_fn(free)
+    blocked = free & ((rank_u >= room_u) | (rank_v >= room_v))
+    commit = free & ~blocked
+    return commit, blocked
+
+
+def _side_rank_matrix(ids: jax.Array, valid: jax.Array):
+    """rank(free)[i] = #{free j < i with ids[j] == ids[i]} via the strictly
+    lower-triangular same-id matrix — the per-side analogue of
+    :func:`share_matrix` (O(T^2) VPU compares, 2-D iota so it traces inside
+    Pallas TPU kernels unchanged)."""
+    t = ids.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1)
+    mat = (
+        (ids[:, None] == ids[None, :])
+        & (cols < rows)
+        & valid[None, :]
+        & valid[:, None]
+    )
+
+    def rank(free):
+        return jnp.sum((mat & free[None, :]).astype(jnp.int32), axis=1)
+
+    return rank
+
+
+def _side_rank_sort(ids: jax.Array, valid: jax.Array, n: int):
+    """Same rank function via one per-tile sort — the per-side analogue of
+    :func:`blocked_by_claim_sort`. Slots sorted once by (id, edge index);
+    each round is then a gather + cumsum: rank = exclusive prefix of the
+    free mask within the edge's id run. Same int32 composite-key bound."""
+    t = ids.shape[0]
+    if (n + 1) * (t + 1) >= 2**31:
+        raise ValueError(
+            f"claim-sort int32 key overflow: n={n}, tile={t}; use "
+            "conflict_method='matrix' (or 'auto', which picks it)"
+        )
+    idx = jnp.arange(t, dtype=jnp.int32)
+    masked = jnp.where(valid, ids, n).astype(jnp.int32)
+    order = jnp.argsort(masked * (t + 1) + idx)   # unique keys: a total order
+    sids = masked[order]
+    starts = jnp.searchsorted(sids, sids)          # run start per sorted slot
+    pos = jnp.zeros((t,), jnp.int32).at[order].set(idx)  # edge -> sorted slot
+
+    def rank(free):
+        fs = free[order].astype(jnp.int32)
+        excl = jnp.cumsum(fs) - fs                 # exclusive prefix, global
+        return (excl - excl[starts])[pos]          # minus the run's base
+
+    return rank
+
+
+def _side_rank_scatter(ids: jax.Array, valid: jax.Array, n: int):
+    """Same rank function via a vertex-indexed [T, n] one-hot running prefix
+    — the capacitated analogue of :func:`blocked_by_claim_scatter`'s dense
+    [n] claim array (a min no longer suffices: room > 1 needs the claimant
+    *count*). O(T*n) per round, so it wins only when the side's id space is
+    tiny relative to the tile — exactly the MoE expert side, where the
+    cumsum-of-one-hot is the MXU-friendly form."""
+    t = ids.shape[0]
+    onehot = (
+        jax.lax.broadcasted_iota(jnp.int32, (t, n), 1)
+        == jnp.where(valid, ids, n)[:, None]
+    )
+    col = jnp.minimum(jnp.where(valid, ids, 0), n - 1).astype(jnp.int32)
+
+    def rank(free):
+        claims = (onehot & free[:, None]).astype(jnp.int32)
+        pref = jnp.cumsum(claims, axis=0) - claims  # exclusive column prefix
+        return jnp.take_along_axis(pref, col[:, None], axis=1)[:, 0]
+
+    return rank
+
+
+_SIDE_RANKS = {
+    "matrix": lambda ids, valid, n: _side_rank_matrix(ids, valid),
+    "sort": _side_rank_sort,
+    "scatter": _side_rank_scatter,
+}
+
+
+def ranks_from_matrix(u: jax.Array, v: jax.Array, valid: jax.Array):
+    """Capacitated twin of :func:`blocked_from_matrix`: per-side triangular
+    same-id matrices. ``rank_fn(free) -> (rank_u, rank_v)``."""
+    ru, rv = _side_rank_matrix(u, valid), _side_rank_matrix(v, valid)
+    return lambda free: (ru(free), rv(free))
+
+
+def ranks_by_claim_sort(
+    u: jax.Array, v: jax.Array, valid: jax.Array, n_u: int, n_v: int
+):
+    """Capacitated twin of :func:`blocked_by_claim_sort`: one sort per side
+    per tile, O(T) gathers + a cumsum per round."""
+    ru = _side_rank_sort(u, valid, n_u)
+    rv = _side_rank_sort(v, valid, n_v)
+    return lambda free: (ru(free), rv(free))
+
+
+def ranks_by_claim_scatter(
+    u: jax.Array, v: jax.Array, valid: jax.Array, n_u: int, n_v: int
+):
+    """Capacitated twin of :func:`blocked_by_claim_scatter`: vertex-indexed
+    one-hot prefix per side (use when both id spaces are small)."""
+    ru = _side_rank_scatter(u, valid, n_u)
+    rv = _side_rank_scatter(v, valid, n_v)
+    return lambda free: (ru(free), rv(free))
+
+
+def capacitated_rank_fn(
+    u: jax.Array,
+    v: jax.Array,
+    valid: jax.Array,
+    n_u: int,
+    n_v: int,
+    method: str = "auto",
+):
+    """Build the per-side rank function for :func:`first_k_claim_commit`.
+
+    ``method="auto"`` picks *per side* (the sides' id spaces differ wildly in
+    the MoE case: thousands of tokens vs a handful of experts): the one-hot
+    prefix when the space is tiny, claim-sort while its int32 key fits, the
+    T^2 matrix beyond. All three compute the identical function, so the
+    choice never changes output (test-pinned, like the unit-capacity trio).
+    Explicit ``"matrix"`` / ``"sort"`` / ``"scatter"`` force one
+    implementation on both sides."""
+    t = u.shape[0]
+
+    def pick(n):
+        if n <= max(64, t // 8):
+            return "scatter"
+        if (n + 1) * (t + 1) < 2**31:
+            return "sort"
+        return "matrix"
+
+    if method == "auto":
+        mu, mv = pick(n_u), pick(n_v)
+    elif method in _SIDE_RANKS:
+        mu = mv = method
+    else:
+        raise ValueError(f"unknown conflict_method {method!r}")
+    ru = _SIDE_RANKS[mu](u, valid, n_u)
+    rv = _SIDE_RANKS[mv](v, valid, n_v)
+    return lambda free: (ru(free), rv(free))
+
+
 def run_first_claim_rounds(
     u: jax.Array,
     v: jax.Array,
@@ -209,23 +444,74 @@ def run_first_claim_rounds(
     apply_commits: Callable[[jax.Array], None],
     vector_rounds: int,
     blocked_fn: Callable[[jax.Array], jax.Array] = None,
+    capacities: Optional[Tuple[int, int]] = None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Run the unrolled round loop over one tile.
+    """Run the unrolled round loop over one tile (DESIGN.md §3 / §9).
 
-    ``read_state()`` gathers (state[u], state[v]); ``apply_commits(commit)``
-    scatters MCHD to the endpoints of committed edges — both close over the
-    caller's state container (a VMEM ref in the kernel, an array cell in jnp
-    callers). ``blocked_fn`` defaults to the share-matrix implementation and
-    lets the caller share one instance with the fallback. Returns (matched,
-    conflicts_per_edge)."""
+    Args:
+        u, v: int32[T] endpoint ids of the tile's edges (one shared vertex
+            space in the unit-capacity case; two independent id spaces —
+            e.g. tokens and experts — in the capacitated case).
+        valid: bool[T] — padding / self-loop mask; invalid edges never
+            commit, never block, never count.
+        read_state: ``() -> (a, b)`` gathers the per-edge endpoint values —
+            ``(state[u], state[v])`` for unit capacity, the per-edge *used
+            counts* ``(used_u[u], used_v[v])`` when ``capacities`` is given.
+            Closes over the caller's state container (a VMEM ref in the
+            Pallas kernel, an array cell in jnp callers).
+        apply_commits: ``commit -> None`` scatters this round's commits back
+            into that container (MCHD to both endpoints / +1 to both used
+            counters). Committed edges are mutually claim-disjoint within
+            remaining room by construction, so the scatter is conflict-free.
+        vector_rounds: number of unrolled rounds. Pure unroll tuning: the
+            exact fallback (:func:`greedy_fallback_rounds`) reaches the same
+            fixpoint from any unroll depth, so this never changes the output
+            — only the conflicts counter and how much work stays out of the
+            ``while_loop`` (test-pinned; see DESIGN.md §3 and, for why the
+            capacitated default differs, §9).
+        blocked_fn: unit capacity — one of the three ``blocked_*`` builders
+            (defaults to share-matrix); capacitated — a *rank_fn* from
+            :func:`capacitated_rank_fn` / the three ``ranks_*`` builders
+            (required: there is no per-side default without the id-space
+            sizes).
+        capacities: ``None`` (unit capacity — the paper's reservation step)
+            or ``(cap_u, cap_v)`` per-side budgets; see
+            :func:`first_k_claim_commit`.
+
+    Returns:
+        ``(matched bool[T], conflicts int32[T])`` — commits accumulated over
+        the rounds and the per-edge blocked-round count (Table II
+        instrumentation).
+
+    Invariant (per round): every committed edge was free, and for each of
+    its endpoints fewer free lower-index edges claimed that endpoint than it
+    had remaining room. The lowest-index free edge always commits, so every
+    round makes progress.
+    """
     t = u.shape[0]
-    if blocked_fn is None:
-        blocked_fn = blocked_from_matrix(share_matrix(u, v, valid))
+    if capacities is None:
+        if blocked_fn is None:
+            blocked_fn = blocked_from_matrix(share_matrix(u, v, valid))
+
+        def commit_round(a, b, matched):
+            return first_claim_commit(a, b, valid, matched, blocked_fn)
+    else:
+        if blocked_fn is None:
+            raise ValueError(
+                "capacitated rounds need a rank_fn (capacitated_rank_fn)"
+            )
+        cap_u, cap_v = capacities
+
+        def commit_round(a, b, matched):
+            return first_k_claim_commit(
+                a, b, valid, matched, blocked_fn, cap_u, cap_v
+            )
+
     matched = jnp.zeros((t,), jnp.bool_)
     conflicts = jnp.zeros((t,), jnp.int32)
     for _ in range(vector_rounds):
-        su, sv = read_state()
-        commit, blocked = first_claim_commit(su, sv, valid, matched, blocked_fn)
+        a, b = read_state()
+        commit, blocked = commit_round(a, b, matched)
         apply_commits(commit)
         matched = matched | commit
         conflicts = conflicts + blocked.astype(jnp.int32)
@@ -233,56 +519,78 @@ def run_first_claim_rounds(
 
 
 def greedy_fallback_rounds(
-    state: jax.Array,
+    state,
     u: jax.Array,
     v: jax.Array,
     valid: jax.Array,
     matched: jax.Array,
     blocked_fn: Callable[[jax.Array], jax.Array],
     *,
-    gather: Callable[[jax.Array], Tuple[jax.Array, jax.Array]],
-    scatter: Callable[[jax.Array, jax.Array], jax.Array],
+    gather,
+    scatter,
+    capacities: Optional[Tuple[int, int]] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Exact vectorized cleanup: iterate first-claim rounds until the tile has
     no free edge left. Returns (state, matched, fallback_taken).
 
     The fixpoint equals the sequential index-order greedy over the tile's
     remaining edges — the invariant the old scalar-scan fallback enforced.
-    Sketch (induction on edge index): the lowest-index free edge is never
-    blocked, so it commits the round it first appears free; a higher-index
-    edge commits only once every smaller conflicting edge is decided, and it
-    can only die on an MCHD endpoint. MCHD endpoints come only from committed
-    edges, which by induction are exactly the greedy winners, so each edge's
-    final decision matches the sequential scan. Every iteration commits at
-    least one edge while any is free, so the loop terminates in at most T
-    rounds — in practice the depth of the worst surviving conflict chain.
+    Sketch (induction on edge index): after each round every undecided valid
+    edge is either free or dead-on-arrival next round (an endpoint out of
+    room), so every undecided free edge reserves its claim against all
+    higher-index edges; the lowest-index free edge is never blocked, so it
+    commits the round it first appears free, and a higher-index edge commits
+    only once enough smaller conflicting edges are decided that room remains
+    for it — which is exactly the sequential scan's accounting. Every
+    iteration commits at least one edge while any is free, so the loop
+    terminates in at most T rounds — in practice the depth of the worst
+    surviving conflict chain. This holds for unit capacity (room is 0/1,
+    MCHD endpoints come only from committed edges) and verbatim for the
+    capacitated rule of :func:`first_k_claim_commit` (DESIGN.md §9).
 
+    ``state`` is whatever the caller's gather/scatter understand — the
+    vertex-state array for unit capacity, the ``(used_u, used_v)`` counter
+    pair (any pytree) when ``capacities=(cap_u, cap_v)`` is given.
     ``gather``/``scatter`` are *pure value* functions (state in, state out) so
     the state threads through the ``while_loop`` carry explicitly — closures
     that mutate a cell would leak tracers across the loop boundary. The
-    gathered (su, sv) ride the carry too: one gather per iteration (in the
-    kernel a gather is two [T, W] MXU matmuls — don't pay it twice).
+    gathered per-edge values ride the carry too: one gather per iteration (in
+    the kernel a gather is two [T, W] MXU matmuls — don't pay it twice).
     """
+    if capacities is None:
 
-    def free_mask(su, sv, matched):
-        return valid & (~matched) & (su == ACC) & (sv == ACC)
+        def free_mask(a, b, matched):
+            return valid & (~matched) & (a == ACC) & (b == ACC)
+
+        def commit_round(a, b, matched):
+            return first_claim_commit(a, b, valid, matched, blocked_fn)
+    else:
+        cap_u, cap_v = capacities
+
+        def free_mask(a, b, matched):
+            return valid & (~matched) & (a < cap_u) & (b < cap_v)
+
+        def commit_round(a, b, matched):
+            return first_k_claim_commit(
+                a, b, valid, matched, blocked_fn, cap_u, cap_v
+            )
 
     def cond(carry):
         return carry[2]
 
     def body(carry):
-        state, matched, _, su, sv = carry
-        commit, _blocked = first_claim_commit(su, sv, valid, matched, blocked_fn)
+        state, matched, _, a, b = carry
+        commit, _blocked = commit_round(a, b, matched)
         state = scatter(state, commit)
         matched = matched | commit
-        su, sv = gather(state)
-        go = jnp.any(free_mask(su, sv, matched))
-        return state, matched, go, su, sv
+        a, b = gather(state)
+        go = jnp.any(free_mask(a, b, matched))
+        return state, matched, go, a, b
 
-    su, sv = gather(state)
-    taken = jnp.any(free_mask(su, sv, matched))
+    a, b = gather(state)
+    taken = jnp.any(free_mask(a, b, matched))
     state, matched, _, _, _ = jax.lax.while_loop(
-        cond, body, (state, matched, taken, su, sv)
+        cond, body, (state, matched, taken, a, b)
     )
     return state, matched, taken
 
@@ -301,16 +609,32 @@ def tile_pass(
     fallback, unless ``fallback=False``) against a full ``state`` array of
     ``n`` vertices. Shared by the single-device matcher, the distributed
     local pass / replay, and the device-resident pipeline's boundary
-    epilogue.
+    epilogue (DESIGN.md §1, §3).
 
-    ``conflict_method`` picks the blocked implementation — ``"auto"``
-    (default: vertex-indexed claim scatter-min when the state is small
-    relative to the tile, claim-sort while its int32 key fits, share matrix
-    beyond), ``"scatter"``, ``"sort"``, or ``"matrix"`` (the compiled
-    Pallas boundary kernel forces it because Mosaic has no sort/scatter).
-    All compute the identical function, so the choice never changes output.
+    Args:
+        state: uint8/int32[n] vertex states (ACC/MCHD; dtype-agnostic).
+        u, v: int32[T] endpoint ids; invalid edges are ``u < 0`` or
+            ``u == v`` (pad convention of ``graphs/windows.py``).
+        n: static vertex count (shape of ``state``).
+        vector_rounds: unrolled rounds before the fallback; pure tuning —
+            never changes the output (DESIGN.md §3, test-pinned).
+        fallback: run :func:`greedy_fallback_rounds` to the exact greedy
+            fixpoint (``False`` only for instrumentation).
+        conflict_method: picks the blocked implementation — ``"auto"``
+            (default: vertex-indexed claim scatter-min when the state is
+            small relative to the tile, claim-sort while its int32 key
+            fits, share matrix beyond), ``"scatter"``, ``"sort"``, or
+            ``"matrix"`` (the compiled Pallas boundary kernel forces matrix
+            because Mosaic has no sort/scatter). All compute the identical
+            function, so the choice never changes output.
 
-    Returns (state, matched, conflicts_per_edge, fallback_taken)."""
+    Returns:
+        ``(state, matched, conflicts_per_edge, fallback_taken)``; every
+        valid edge is decided — matched, or dead on an MCHD endpoint (the
+        paper's single-pass invariant).
+
+    The capacitated twin (per-side used counts + budgets) is
+    :func:`tile_pass_capacitated` (DESIGN.md §9)."""
     valid = (u != v) & (u >= 0)
     t = u.shape[0]
     if conflict_method == "auto":
@@ -362,6 +686,81 @@ def tile_pass(
     return state, matched, conflicts, taken
 
 
+def tile_pass_capacitated(
+    used_u: jax.Array,
+    used_v: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    *,
+    cap_u: int,
+    cap_v: int,
+    vector_rounds: int,
+    fallback: bool = True,
+    conflict_method: str = "auto",
+) -> Tuple[Tuple[jax.Array, jax.Array], jax.Array, jax.Array, jax.Array]:
+    """Capacitated twin of :func:`tile_pass` (DESIGN.md §9): process one edge
+    tile against per-side used-count states with per-side budgets.
+
+    Args:
+        used_u: int32[n_u] used counts of the u side (e.g. per-token).
+        used_v: int32[n_v] used counts of the v side (e.g. per-expert).
+        u, v: int32[T] per-edge side ids; ``-1`` marks padding (validity is
+            ``(u >= 0) & (v >= 0)`` — no ``u != v`` check: the sides are
+            independent id spaces, unlike the unipartite :func:`tile_pass`).
+        cap_u, cap_v: static per-side budgets.
+        vector_rounds / fallback / conflict_method: as in :func:`tile_pass`;
+            ``conflict_method`` picks per side when ``"auto"``
+            (:func:`capacitated_rank_fn`).
+
+    Returns:
+        ``((used_u, used_v), matched, conflicts_per_edge, fallback_taken)``.
+        The fixpoint (rounds + fallback) is exactly the sequential
+        index-order greedy b-matching over the tile's edges, so scanning
+        tiles with the used counts as carry yields the sequential greedy
+        over the whole stream (test-pinned against a numpy oracle).
+    """
+    valid = (u >= 0) & (v >= 0)
+    n_u, n_v = used_u.shape[0], used_v.shape[0]
+    rank_fn = capacitated_rank_fn(u, v, valid, n_u, n_v, conflict_method)
+    ug = jnp.where(valid, u, 0)
+    vg = jnp.where(valid, v, 0)
+
+    def gather(st):
+        return st[0][ug], st[1][vg]
+
+    def scatter(st, commit):
+        uu = st[0].at[jnp.where(commit, u, n_u)].add(1, mode="drop")
+        uv = st[1].at[jnp.where(commit, v, n_v)].add(1, mode="drop")
+        return uu, uv
+
+    class _Cell:
+        pass
+
+    cell = _Cell()
+    cell.state = (used_u, used_v)
+
+    def read_state():
+        return gather(cell.state)
+
+    def apply_commits(commit):
+        cell.state = scatter(cell.state, commit)
+
+    matched, conflicts = run_first_claim_rounds(
+        u, v, valid, read_state, apply_commits, vector_rounds,
+        rank_fn, capacities=(cap_u, cap_v),
+    )
+    state = cell.state
+
+    if not fallback:
+        return state, matched, conflicts, jnp.zeros((), jnp.bool_)
+
+    state, matched, taken = greedy_fallback_rounds(
+        state, u, v, valid, matched, rank_fn,
+        gather=gather, scatter=scatter, capacities=(cap_u, cap_v),
+    )
+    return state, matched, conflicts, taken
+
+
 def window_tier_pass(
     u_rows: jax.Array,   # int32[num_rows, tiles_per_window * tile_size]
     v_rows: jax.Array,   # window-LOCAL ids, -1 padding
@@ -374,20 +773,36 @@ def window_tier_pass(
     interpret: bool = True,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Run the window tier of a two-tier schedule: each row is one window's
-    dispersed tile stream, matched from an all-ACC window-local state.
+    dispersed tile stream, matched from an all-ACC window-local state
+    (DESIGN.md §3; the distributed consumer is §8 step 1).
 
     This is the single entry point the device-resident pipeline
     (``kernels/skipper_match/ops.skipper_match``) and the distributed
-    matcher's per-device LOCAL PASS share. ``backend="pallas"`` launches the
-    2-D-grid revolving-VMEM kernel (``build_pipeline_matcher``);
-    ``backend="xla"`` runs the bit-identical jnp twin
-    (``ref.make_ref_pipeline`` — a flat scan in the exact grid order, uint8
-    state). Imports are deferred: the kernel modules themselves import this
-    module.
+    matcher's per-device LOCAL PASS share — the two matchers cannot drift.
+    ``backend="pallas"`` launches the 2-D-grid revolving-VMEM kernel
+    (``build_pipeline_matcher``); ``backend="xla"`` runs the bit-identical
+    jnp twin (``ref.make_ref_pipeline`` — a flat scan in the exact grid
+    order, uint8 state). Imports are deferred: the kernel modules themselves
+    import this module.
 
-    Returns ``(states, matched, conflicts)`` with ``states`` of shape
-    ``[num_rows, window]`` (int32 on the pallas path, uint8 on xla — values
-    identical) and ``matched``/``conflicts`` int32 of ``u_rows``'s shape.
+    Args:
+        u_rows, v_rows: int32[num_rows, tiles_per_window * tile_size]
+            window-LOCAL endpoint ids, -1 padding (rows are the dense tier
+            of ``graphs/windows.build_window_schedule``).
+        window / tiles_per_window / tile_size: the schedule's static shape.
+        vector_rounds: forwarded to the per-tile rounds (pure tuning).
+        backend: ``"pallas"`` or ``"xla"``.
+        interpret: Pallas interpreter flag (ignored by the xla twin).
+
+    Returns:
+        ``(states, matched, conflicts)`` with ``states`` of shape
+        ``[num_rows, window]`` (int32 on the pallas path, uint8 on xla —
+        values identical, test-pinned) and ``matched``/``conflicts`` int32
+        of ``u_rows``'s shape.
+
+    Invariant: each row's result depends only on that row's tiles (windows
+    are disjoint vertex ranges), which is what lets the distributed matcher
+    deal rows to devices with zero communication.
     """
     num_rows = u_rows.shape[0]
     if backend == "pallas":

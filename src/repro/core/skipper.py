@@ -62,7 +62,10 @@ __all__ = ["skipper", "tile_pass"]
 
 @partial(
     jax.jit,
-    static_argnames=("tile_size", "vector_rounds", "with_conflicts", "dispersed"),
+    static_argnames=(
+        "tile_size", "vector_rounds", "with_conflicts", "dispersed",
+        "conflict_method",
+    ),
 )
 def skipper(
     edges: EdgeList,
@@ -70,11 +73,14 @@ def skipper(
     vector_rounds: int = 1,
     with_conflicts: bool = False,
     dispersed: bool = True,
+    conflict_method: str = "auto",
 ) -> Tuple[MatchResult, Optional[jax.Array]]:
     """Single-pass tiled Skipper. Returns (MatchResult, conflicts_per_edge?).
 
     conflicts_per_edge (int32[|E|]) is returned when ``with_conflicts`` — the
     Table II instrumentation (number of rounds each edge spent blocked).
+    ``conflict_method`` is forwarded to ``engine.tile_pass``'s blocked
+    predicate selection (never changes output; see DESIGN.md §3).
     """
     n = edges.num_vertices
     m = edges.num_edges
@@ -94,7 +100,8 @@ def skipper(
         state, loads, stores, fallbacks = carry
         u, v = uv
         state, matched, conflicts, fb = tile_pass(
-            state, u, v, n=n, vector_rounds=vector_rounds
+            state, u, v, n=n, vector_rounds=vector_rounds,
+            conflict_method=conflict_method,
         )
         valid = (u != v) & (u >= 0)
         nvalid = jnp.sum(valid).astype(jnp.int32)

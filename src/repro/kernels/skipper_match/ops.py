@@ -94,6 +94,7 @@ def _build_pipeline(
     vector_rounds: int,
     interpret: bool,
     backend: str,
+    conflict_method: str,
 ):
     """One jitted compilation unit per static schedule shape: windowed kernel
     sweep over the dense rows + boundary epilogue + on-device counters.
@@ -153,7 +154,9 @@ def _build_pipeline(
 
                 def bstep(st, uv):
                     st, mt, cf, _fb = engine.tile_pass(
-                        st, uv[0], uv[1], n=n_flat, vector_rounds=vector_rounds
+                        st, uv[0], uv[1], n=n_flat,
+                        vector_rounds=vector_rounds,
+                        conflict_method=conflict_method,
                     )
                     return st, (mt, cf)
 
@@ -201,6 +204,7 @@ def skipper_match(
     dispersed: bool = True,
     reorder: str = "none",
     with_conflicts: bool = False,
+    conflict_method: str = "auto",
 ) -> Union[MatchResult, Tuple[MatchResult, jax.Array]]:
     """Full-graph device-resident matcher: one traced pipeline for all
     windows plus the in-device boundary epilogue.
@@ -211,6 +215,9 @@ def skipper_match(
     schedule. ``reorder`` selects a locality renumbering policy
     (``graphs/reorder.py``); results — mask, conflicts AND state — are
     always in the original edge-stream order / vertex ids regardless.
+    ``conflict_method`` reaches the XLA twin's boundary-epilogue
+    ``engine.tile_pass`` (the Pallas kernels force the share-matrix form —
+    Mosaic has no sort/scatter); the choice never changes output.
     """
     if backend not in ("pallas", "xla"):
         raise ValueError(f"unknown backend {backend!r}")
@@ -234,6 +241,7 @@ def skipper_match(
         vector_rounds,
         bool(interpret),
         backend,
+        conflict_method,
     )
     perm = schedule.perm
     if perm is None:

@@ -5,11 +5,13 @@
   paper-technique router avoids).
 * ``skipper`` — the paper's technique as a first-class feature: token-expert
   assignment as a *capacity-constrained maximal b-matching* over the
-  score-sorted candidate edge stream, computed by the single-pass first-claim
-  matcher (core/bipartite.py). Capacity is respected by construction — no
-  token ever silently dropped at dispatch; conflicts (two tokens claiming the
-  last slot of an expert) are resolved just-in-time inside the tile, not by
-  iterative re-balancing (Sinkhorn/auction) passes.
+  score-sorted candidate edge stream, computed by the shared claim engine's
+  capacitated first-K-claim rounds (core/bipartite.py -> core/engine.py,
+  DESIGN.md §9). Capacity is respected by construction — no token ever
+  silently dropped at dispatch; conflicts (two tokens claiming the last slot
+  of an expert) are resolved just-in-time inside the tile, not by iterative
+  re-balancing (Sinkhorn/auction) passes — and the accepted set is exactly
+  the sequential greedy over the score order.
 
 Dispatch is group-local: tokens are split into G groups of ``group_tokens``
 (aligned with the data shards at scale, the standard per-shard capacity
@@ -79,6 +81,11 @@ def _route_group_skipper(scores, k, capacity, num_candidates):
     # in the accepted-candidate softmax below — standard MoE practice.
     sg = jax.lax.stop_gradient
     order = jnp.argsort(-sg(flat_val))               # best edges first
+    # vector_rounds is left at the engine's documented default
+    # (bipartite.BMATCH_VECTOR_ROUNDS): the output is rounds-invariant
+    # (exact-fallback fixpoint, test-pinned), and under this vmap the
+    # while_loop fallback costs every group the batch-max iteration count —
+    # exactly what the default's second unrolled round avoids.
     acc_sorted = bmatch_assign(
         sg(flat_tok[order]),
         sg(flat_exp[order]),
@@ -87,7 +94,6 @@ def _route_group_skipper(scores, k, capacity, num_candidates):
         token_budget=k,
         expert_capacity=capacity,
         tile_size=MATCH_TILE,
-        vector_rounds=3,
     )
     accept = jnp.zeros((n * kp,), bool).at[order].set(acc_sorted)
     accept = sg(accept)

@@ -1,12 +1,14 @@
 """MoE routing: the Skipper b-matching router (the paper technique as a
-framework feature) vs the top-k baseline."""
+framework feature, since PR 4 built on the capacitated claim engine —
+DESIGN.md §9) vs the top-k baseline. Engine-level pins live in
+tests/test_bipartite.py."""
 import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+# only the property test needs hypothesis (a [dev] dep)
+from _hyp import given, settings, st  # noqa: E402
 
 from repro.configs import get_smoke_config
 from repro.core.bipartite import bmatch_assign
