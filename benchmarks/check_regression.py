@@ -2,8 +2,8 @@
 
 Compares a freshly recorded kernel_bench JSON against the committed baseline
 and fails if any gated row (``kernel/windowed_pipeline/*``,
-``kernel/distributed_pipeline/*`` or ``kernel/bmatch/*``) regressed beyond
-the tolerance.
+``kernel/distributed_pipeline/*``, ``kernel/boundary_pipeline/*`` or
+``kernel/bmatch/*``) regressed beyond the tolerance.
 
 CI runners and the recording machine differ in absolute speed, so raw
 ``us_per_call`` comparisons are meaningless across hosts. Each gated row is
@@ -33,6 +33,9 @@ import sys
 PREFIXES = {
     "kernel/windowed_pipeline/": "kernel/jnp_matcher/",
     "kernel/distributed_pipeline/": "kernel/distributed_jnp_local/",
+    # boundary-heavy (no-reorder rmat14, global tier dominant): gates the
+    # block-pair epilogue against the same-run jnp tiled matcher
+    "kernel/boundary_pipeline/": "kernel/boundary_jnp/",
 }
 INFO_PREFIXES = {
     "kernel/windowed_pipeline_noreorder/": "kernel/jnp_matcher/",

@@ -13,7 +13,15 @@ all of them):
                  (non-interpret) pipeline is timed end-to-end. On CPU the
                  compiled path is the pipeline's XLA twin — identical
                  schedule and semantics, one compilation unit; on TPU the
-                 same driver compiles the Pallas kernel via Mosaic.
+                 same driver compiles the Pallas kernel via Mosaic. The host
+                 precompute (including block-pair grouping, DESIGN.md §10)
+                 is recorded per row as ``schedule_build_ms`` in the JSON —
+                 visible in the trajectory but EXCLUDED from the Medges/s
+                 cells, which time only the device pipeline. A
+                 boundary-heavy pair of rows (``kernel/boundary_pipeline/*``
+                 normalized by ``kernel/boundary_jnp/*``: rmat14, no
+                 reorder, intra~0.13 — the global tier dominates) gates the
+                 block-pair epilogue specifically, in smoke too.
 * ``distributed`` — the multi-device matcher on 4 FORCED CPU host devices
                  (a subprocess sets ``--xla_force_host_platform_device_count``
                  so the main process keeps its jax). Two rows per graph:
@@ -42,6 +50,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
 import jax
 import jax.numpy as jnp
@@ -142,27 +151,32 @@ def _bench_windowed(rows, extras, scale: str, smoke: bool, reorder: str):
     # stable; the min itself estimates capability (noise is additive).
     iters = 9
 
+    def _timed_schedule(g, **kw):
+        t0 = time.perf_counter()
+        s = build_window_schedule(g, window=window, tile_size=tile, **kw)
+        return s, (time.perf_counter() - t0) * 1e3
+
     for name, g in graphs.items():
         m = g.num_edges
         # headline row: the requested reorder policy; plus the reorder-off
         # twin so the trajectory captures the locality win.
         cells = []
-        sched = build_window_schedule(g, window=window, tile_size=tile,
-                                      reorder=reorder)
-        cells.append((f"kernel/windowed_pipeline/{name}", sched,
+        sched, sched_ms = _timed_schedule(g, reorder=reorder)
+        cells.append((f"kernel/windowed_pipeline/{name}", sched, sched_ms,
                       lambda s=sched: skipper_match(schedule=s, backend=backend)))
         if reorder != "none":
-            off = build_window_schedule(g, window=window, tile_size=tile)
+            off, off_ms = _timed_schedule(g)
             cells.append((f"kernel/windowed_pipeline_noreorder/{name}", off,
+                          off_ms,
                           lambda s=off: skipper_match(schedule=s, backend=backend)))
-        cells.append((f"kernel/jnp_matcher/{name}", None,
+        cells.append((f"kernel/jnp_matcher/{name}", None, None,
                       lambda: skipper(g, tile_size=tile)))
 
-        times = {row_name: [] for row_name, _, _ in cells}
+        times = {row_name: [] for row_name, _, _, _ in cells}
         for _ in range(iters + 1):  # first pass = warmup/compile
-            for row_name, _, fn in cells:
+            for row_name, _, _, fn in cells:
                 times[row_name].append(time_call(fn, warmup=0, iters=1))
-        for row_name, sched_i, _ in cells:
+        for row_name, sched_i, sched_ms_i, _ in cells:
             t = min(times[row_name][1:])
             if sched_i is None:
                 rows.append(emit(row_name, t, f"{m / t / 1e6:.1f}Medges_s"))
@@ -177,7 +191,51 @@ def _bench_windowed(rows, extras, scale: str, smoke: bool, reorder: str):
                 "intra": round(sched_i.intra_fraction, 4),
                 "windowed": round(sched_i.windowed_fraction, 4),
                 "padding_waste": round(sched_i.padding_waste, 4),
+                # host precompute, NOT in the Medges/s cell (device-only)
+                "schedule_build_ms": round(sched_ms_i, 2),
             }
+
+
+def _bench_boundary(rows, extras):
+    """Boundary-heavy gated pair (runs in smoke too): rmat14 with NO reorder
+    leaves the global tier dominant (intra ~0.13), so
+    ``kernel/boundary_pipeline/rmat14`` times the block-pair epilogue
+    specifically; check_regression gates it normalized by the same-run
+    ``kernel/boundary_jnp/rmat14`` tiled-matcher row (interleaved min-of-N,
+    same protocol as the windowed cells)."""
+    g = rmat_graph(14, 16, seed=1)
+    m = g.num_edges
+    tile = 256
+    backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    t0 = time.perf_counter()
+    sched = build_window_schedule(g, window=2048, tile_size=tile)
+    sched_ms = (time.perf_counter() - t0) * 1e3
+
+    cells = [
+        ("kernel/boundary_pipeline/rmat14",
+         lambda: skipper_match(schedule=sched, backend=backend)),
+        ("kernel/boundary_jnp/rmat14", lambda: skipper(g, tile_size=tile)),
+    ]
+    iters = 9
+    times = {cell: [] for cell, _ in cells}
+    for _ in range(iters + 1):  # first pass = warmup/compile
+        for cell, fn in cells:
+            times[cell].append(time_call(fn, warmup=0, iters=1))
+    for cell, _ in cells:
+        t = min(times[cell][1:])
+        if cell.startswith("kernel/boundary_pipeline/"):
+            rows.append(emit(
+                cell, t,
+                f"{m / t / 1e6:.1f}Medges_s_intra{sched.intra_fraction:.2f}",
+            ))
+            extras[cell] = {
+                "reorder": sched.reorder,
+                "intra": round(sched.intra_fraction, 4),
+                "boundary_pairs": sched.num_boundary_pairs,
+                "schedule_build_ms": round(sched_ms, 2),
+            }
+        else:
+            rows.append(emit(cell, t, f"{m / t / 1e6:.1f}Medges_s"))
 
 
 def _distributed_cases(scale: str, smoke: bool):
@@ -297,6 +355,7 @@ def run(scale: str = "small", matcher: str = "both", smoke: bool = False,
         _bench_jnp(rows, extras, smoke)
     if matcher in ("both", "windowed"):
         _bench_windowed(rows, extras, scale, smoke, reorder)
+        _bench_boundary(rows, extras)
     if matcher in ("both", "distributed"):
         _bench_distributed(rows, extras, scale, smoke, reorder)
     if record:

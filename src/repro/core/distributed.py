@@ -131,6 +131,7 @@ def _make_round_fn(
     vector_rounds: int,
     tile_size: int,
     block: int,
+    edge_lookup=None,
 ):
     """Build the four-step round body shared by both distributed schedules.
 
@@ -143,6 +144,15 @@ def _make_round_fn(
     drain rounds contribute nothing — and get psum'd at the end; the replay
     terms are identical on every device (the replay is replicated) and are
     counted once.
+
+    ``edge_lookup``: optional ``(lu, lv)`` replicated int32 arrays mapping a
+    stream index to its endpoints. When the dealt stream is STATIC schedule
+    data replicated on every device (the locality-sharded global tier: the
+    block-pair grouped ``WindowSchedule.boundary_u``/``boundary_v``), a
+    proposal is fully identified by its stream index alone — the GATHER
+    moves one int per slot instead of three (u, v, idx) and receivers
+    reconstruct the endpoints locally. The dispersed path keeps the 3-int
+    proposals (its raw stream is sharded, not replicated).
     """
     cap = block  # retry buffer capacity
     slab = block + cap
@@ -167,17 +177,24 @@ def _make_round_fn(
         dead_global = valid & (~proposed) & ((sgu == MCHD) | (sgv == MCHD))
         dead_prov = valid & (~proposed) & (~dead_global)
 
-        # 2. GATHER proposals (u,v,idx; -1 where not proposed)
-        pu = jnp.where(proposed, u, -1)
-        pv = jnp.where(proposed, v, -1)
+        # 2. GATHER proposals; position-major (round-robin across devices)
+        # deterministic order. With a replicated stream lookup, a proposal
+        # is just its stream index (1 int); otherwise (u, v, idx).
         pi = jnp.where(proposed, idx, -1)
-        gu = jax.lax.all_gather(pu, axis_name)  # [D, slab_t]
-        gv = jax.lax.all_gather(pv, axis_name)
-        gi = jax.lax.all_gather(pi, axis_name)
-        # position-major (round-robin across devices) deterministic order
-        gu = gu.T.reshape(-1)
-        gv = gv.T.reshape(-1)
-        gi = gi.T.reshape(-1)
+        gi = jax.lax.all_gather(pi, axis_name).T.reshape(-1)  # [D * slab_t]
+        if edge_lookup is not None:
+            lu, lv = edge_lookup
+            live = gi >= 0
+            gj = jnp.clip(gi, 0, lu.shape[0] - 1)
+            gu = jnp.where(live, lu[gj], -1)
+            gv = jnp.where(live, lv[gj], -1)
+            round_gints = slab_t * num_devices
+        else:
+            pu = jnp.where(proposed, u, -1)
+            pv = jnp.where(proposed, v, -1)
+            gu = jax.lax.all_gather(pu, axis_name).T.reshape(-1)
+            gv = jax.lax.all_gather(pv, axis_name).T.reshape(-1)
+            round_gints = 3 * slab_t * num_devices
 
         # 3. REPLAY on the committed state (deterministic first-claim order)
         new_state, winners, _ = _local_pass(
@@ -213,7 +230,7 @@ def _make_round_fn(
             props + n_props,
             req + nreq,
             ovf + overflow,
-            gints + 3 * slab_t * num_devices,
+            gints + round_gints,
             reads + nvalid,
             l_loc + 2 * nvalid + 2 * nconf,
             l_rep + 2 * n_replayed,
@@ -307,6 +324,8 @@ def locality_sharded_fn(
     bv_blocks: jax.Array,
     bi_blocks: jax.Array,  # [1, R, B] boundary stream positions
     window_ids: jax.Array,  # int32[num_rows] row -> window id (replicated)
+    boundary_lu: jax.Array,  # int32[nb_pad] stream-position -> u (replicated)
+    boundary_lv: jax.Array,  #   ... -> v: the idx-only proposal lookup
     *,
     window: int,
     tiles_per_window: int,
@@ -333,7 +352,10 @@ def locality_sharded_fn(
 
     PHASE B (global tier): the boundary blocks run the four-step
     propose/gather/replay protocol against that committed state — same
-    rounds, seeded with the window-tier commits instead of all-ACC.
+    rounds, seeded with the window-tier commits instead of all-ACC. The
+    dealt stream is the replicated block-pair grouped schedule data, so
+    proposals gather as bare stream indices (``edge_lookup``): 1 gathered
+    int per slot instead of 3.
 
     Returns (flat committed state [replicated], this device's window-tier
     matched slab [sharded], boundary winners mask [replicated], stats).
@@ -399,6 +421,7 @@ def locality_sharded_fn(
             vector_rounds=vector_rounds,
             tile_size=tile_size,
             block=block,
+            edge_lookup=(boundary_lu, boundary_lv),
         )
         mask0 = jnp.zeros((num_boundary_padded,), jnp.bool_)
         empty = jnp.full((block,), -1, jnp.int32)
@@ -479,7 +502,7 @@ def _compiled_sharded(
     shard = compat.shard_map(
         fn,
         mesh=mesh,
-        in_specs=(P(axis_name),) * 6 + (P(None),),
+        in_specs=(P(axis_name),) * 6 + (P(None), P(None), P(None)),
         out_specs=(P(None), P(axis_name), P(None), (P(),) * 10),
         check_vma=False,
     )
@@ -608,6 +631,8 @@ def distributed_skipper(
         jnp.asarray(device_schedule.boundary_vb),
         jnp.asarray(device_schedule.boundary_ib),
         jnp.asarray(schedule.window_ids),
+        jnp.asarray(schedule.boundary_u),
+        jnp.asarray(schedule.boundary_v),
     )
 
     # ---- host epilogue: decisions -> stream order, state -> original ids

@@ -60,8 +60,13 @@ drivers:
   fallback under vmap degrades to always paying T steps: ``lax.cond``
   becomes ``select`` and runs both branches).
 * ``tile_pass`` — the full jnp tile pass (rounds + exact fallback) consumed
-  by the single-device and distributed matchers and by the device-resident
-  pipeline's boundary epilogue.
+  by the single-device and distributed matchers.
+* ``tile_pass_pair`` — the two-block variant driving the block-pair
+  boundary epilogue (DESIGN.md §10): slice two ``window``-sized state rows,
+  run ``tile_pass`` on their concatenation with the schedule's offset-local
+  ids, write the halves back. The Pallas pair kernel runs the same rounds +
+  fallback over the same concatenation (DMA'd into VMEM scratch), so the
+  jnp twin is bit-identical by construction.
 * ``window_tier_pass`` — the shared *window tier* entry point: runs a
   ``[num_rows, tiles_per_window * tile_size]`` window-local schedule slab
   through the device-resident pipeline — the Pallas 2-D-grid kernel
@@ -83,6 +88,41 @@ import jax.numpy as jnp
 
 ACC = 0
 MCHD = 2
+
+
+class StateCell:
+    """One mutable state slot with ref-style ``cell[...]`` access — the ONE
+    state-cell shim shared by every tile driver (replaces the ad-hoc ``_Row``
+    / ``_Cell`` classes that used to live in the pipeline kernel and the two
+    ``tile_pass`` variants).
+
+    Backed either by a plain value (``StateCell(value)`` — the jnp tile
+    passes thread jax arrays / pytrees through it) or by caller get/set
+    closures (``StateCell(get=..., set=...)`` — the Pallas kernels' views
+    over VMEM refs, e.g. the (1, W) pipeline block or the (2, W) pair
+    scratch). Only whole-cell ``cell[...]`` reads/writes are supported; the
+    index is ignored.
+    """
+
+    __slots__ = ("_get", "_set", "value")
+
+    def __init__(self, value=None, *, get=None, set=None):
+        if get is None:
+            self.value = value
+
+            def get():
+                return self.value
+
+            def set(v):
+                self.value = v
+
+        self._get, self._set = get, set
+
+    def __getitem__(self, _):
+        return self._get()
+
+    def __setitem__(self, _, value):
+        self._set(value)
 
 
 def share_matrix(u: jax.Array, v: jax.Array, valid: jax.Array) -> jax.Array:
@@ -660,22 +700,18 @@ def tile_pass(
         st = st.at[jnp.where(commit, u, n)].set(MCHD, mode="drop")
         return st.at[jnp.where(commit, v, n)].set(MCHD, mode="drop")
 
-    class _Cell:
-        pass
-
-    cell = _Cell()
-    cell.state = state
+    cell = StateCell(state)
 
     def read_state():
-        return gather(cell.state)
+        return gather(cell[...])
 
     def apply_commits(commit):
-        cell.state = scatter(cell.state, commit)
+        cell[...] = scatter(cell[...], commit)
 
     matched, conflicts = run_first_claim_rounds(
         u, v, valid, read_state, apply_commits, vector_rounds, blocked_fn
     )
-    state = cell.state
+    state = cell[...]
 
     if not fallback:
         return state, matched, conflicts, jnp.zeros((), jnp.bool_)
@@ -684,6 +720,69 @@ def tile_pass(
         state, u, v, valid, matched, blocked_fn, gather=gather, scatter=scatter
     )
     return state, matched, conflicts, taken
+
+
+def tile_pass_pair(
+    state_rows: jax.Array,
+    u_loc: jax.Array,
+    v_loc: jax.Array,
+    blk_u: jax.Array,
+    blk_v: jax.Array,
+    *,
+    window: int,
+    vector_rounds: int,
+    fallback: bool = True,
+    conflict_method: str = "auto",
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Two-block variant of :func:`tile_pass` — the block-pair boundary
+    epilogue's decision step (DESIGN.md §10).
+
+    Processes one tile of T global-tier edges whose endpoints all live in
+    (at most) two vertex-state blocks against ``state_rows`` of shape
+    ``[num_windows, window]``: slice out rows ``blk_u`` and ``blk_v``, run
+    the standard :func:`tile_pass` on their 2W-element concatenation, write
+    the halves back. The endpoint ids are the schedule's *offset-local*
+    encoding (``graphs/windows.py``): ``u_loc`` in ``[0, window)`` relative
+    to block ``blk_u``; ``v_loc`` relative to block ``blk_v`` **plus
+    ``window``** when ``blk_v != blk_u`` and un-offset when the pair is
+    same-block — so within the concatenated pair, two slots alias the same
+    global vertex iff their local ids are equal, and the pair tile is
+    *literally* a ``tile_pass`` over a 2W-vertex state. That is what makes
+    the Pallas pair kernel and this jnp form bit-identical by construction:
+    both run the identical first-claim rounds + exact fallback on the
+    identical local-id tile; only the block load/store differs (DMA +
+    one-hot matmuls there, dynamic row slicing here).
+
+    Write-back order is v-half first, u-half second: for a same-block pair
+    (``blk_u == blk_v``) every local id is < ``window``, the v-half of the
+    concatenation is never read nor written, and the u-half update must win
+    the row — with distinct blocks the two updates touch disjoint rows and
+    the order is irrelevant.
+
+    Args:
+        state_rows: uint8/int32[num_windows, window] blocked vertex states.
+        u_loc, v_loc: int32[T] offset-local endpoint ids (-1 padding).
+        blk_u, blk_v: scalar int32 state-block (window) ids of the pair.
+        window / vector_rounds / fallback / conflict_method: as in
+            :func:`tile_pass` (``n`` is implied: 2 * window).
+
+    Returns:
+        ``(state_rows, matched, conflicts_per_edge, fallback_taken)``.
+    """
+    row_u = jax.lax.dynamic_index_in_dim(state_rows, blk_u, 0, keepdims=False)
+    row_v = jax.lax.dynamic_index_in_dim(state_rows, blk_v, 0, keepdims=False)
+    pair = jnp.concatenate([row_u, row_v])
+    pair, matched, conflicts, taken = tile_pass(
+        pair, u_loc, v_loc, n=2 * window, vector_rounds=vector_rounds,
+        fallback=fallback, conflict_method=conflict_method,
+    )
+    state_rows = jax.lax.dynamic_update_index_in_dim(
+        state_rows, pair[window:], blk_v, 0
+    )
+    state_rows = jax.lax.dynamic_update_index_in_dim(
+        state_rows, pair[:window], blk_u, 0
+    )
+    return state_rows, matched, conflicts, taken
 
 
 def tile_pass_capacitated(
@@ -733,23 +832,19 @@ def tile_pass_capacitated(
         uv = st[1].at[jnp.where(commit, v, n_v)].add(1, mode="drop")
         return uu, uv
 
-    class _Cell:
-        pass
-
-    cell = _Cell()
-    cell.state = (used_u, used_v)
+    cell = StateCell((used_u, used_v))
 
     def read_state():
-        return gather(cell.state)
+        return gather(cell[...])
 
     def apply_commits(commit):
-        cell.state = scatter(cell.state, commit)
+        cell[...] = scatter(cell[...], commit)
 
     matched, conflicts = run_first_claim_rounds(
         u, v, valid, read_state, apply_commits, vector_rounds,
         rank_fn, capacities=(cap_u, cap_v),
     )
-    state = cell.state
+    state = cell[...]
 
     if not fallback:
         return state, matched, conflicts, jnp.zeros((), jnp.bool_)

@@ -33,10 +33,23 @@ Layout (see DESIGN.md "Window-schedule layout"):
     edge_index        : same shape; original stream index of the edge in that
         slot (-1 for padding). This is the slot -> stream half of the
         round-trip mapping; ``stream_to_slot`` computes the inverse.
-    boundary_u/v/index: int32[num_boundary_padded] global-tier edges in
-        stream order (renumbered GLOBAL ids), padded to a tile multiple:
-        cross-window edges plus the edges of coalesced sparse windows;
-        resolved by the in-device epilogue against the full state.
+    boundary_u/v/index: int32[num_boundary_padded] global-tier edges
+        (renumbered GLOBAL ids): cross-window edges plus the edges of
+        coalesced sparse windows, grouped by **block pair** — the
+        (u-window, v-window) pair of each edge — in lexicographic pair
+        order, stream-stable within each pair, with every pair group padded
+        to a tile multiple so each tile touches exactly one pair. Resolved
+        by the in-device block-pair epilogue (DESIGN.md §10), which streams
+        only the pair's two window-sized state blocks per tile.
+    boundary_ulocal/vlocal: int32[num_boundary_padded] the same edges in the
+        epilogue's OFFSET-LOCAL encoding: u minus its block base (in
+        [0, window)); v minus its block base, **plus window when the pair is
+        cross-block** (in [0, 2*window)) — so the concatenated two-block
+        state of a pair tile behaves as one 2*window-vertex id space and
+        same-block pairs degenerate to the first block alone.
+    boundary_blk_u/blk_v: int32[num_boundary_tiles] per-TILE state-block ids
+        of the pair (the scalar-prefetch operands of the Pallas epilogue;
+        num_boundary_tiles = num_boundary_padded // tile_size).
 
 The dispersed deal (paper §IV-C) is applied *within* each window: lane l of
 the window's tile stream walks its own contiguous run of that window's edges
@@ -75,9 +88,14 @@ class WindowSchedule:
     u_tiles: np.ndarray   # int32[num_rows, tiles_per_window * tile_size], local ids
     v_tiles: np.ndarray
     edge_index: np.ndarray  # int32, same shape, stream index or -1
-    boundary_u: np.ndarray  # int32[num_boundary_padded], global ids
-    boundary_v: np.ndarray
+    boundary_u: np.ndarray  # int32[num_boundary_padded], global ids,
+    boundary_v: np.ndarray  #   block-pair grouped order (see module doc)
     boundary_index: np.ndarray
+    # block-pair epilogue operands (same grouped order; see module doc)
+    boundary_ulocal: np.ndarray = None  # int32[num_boundary_padded]
+    boundary_vlocal: np.ndarray = None  # int32[num_boundary_padded]
+    boundary_blk_u: np.ndarray = None   # int32[num_boundary_tiles]
+    boundary_blk_v: np.ndarray = None   # int32[num_boundary_tiles]
     # two-tier bookkeeping: schedule row r holds window window_ids[r]
     window_ids: np.ndarray = None  # int32[num_rows], default arange
     # locality reordering (None = identity / not reordered)
@@ -107,6 +125,21 @@ class WindowSchedule:
     @property
     def num_boundary_padded(self) -> int:
         return int(self.boundary_u.shape[0])
+
+    @property
+    def num_boundary_tiles(self) -> int:
+        return self.num_boundary_padded // self.tile_size
+
+    @property
+    def num_boundary_pairs(self) -> int:
+        """Distinct (u-window, v-window) block pairs in the global tier."""
+        if self.boundary_blk_u is None or not self.boundary_blk_u.size:
+            return 0
+        key = (
+            self.boundary_blk_u.astype(np.int64) * self.num_windows
+            + self.boundary_blk_v
+        )
+        return int(np.unique(key).size)
 
     @property
     def intra_fraction(self) -> float:
@@ -254,22 +287,67 @@ def build_window_schedule(
         v_tiles[r] = np.where(present, v[src] - base, -1).astype(np.int32)
         edge_index[r] = np.where(present, pad, -1).astype(np.int32)
 
+    # ---- global tier: block-pair grouping (DESIGN.md §10) ----------------
+    # Group the global-tier stream by the (u-window, v-window) pair of each
+    # edge — canonical u <= v gives blk_u <= blk_v — in lexicographic pair
+    # order, STABLE within a pair (the stream stays a genuine single pass:
+    # each edge is decided once, in a deterministic schedule order). Each
+    # pair group is padded to a tile multiple so every epilogue tile touches
+    # exactly one pair and the kernel streams just two window-sized state
+    # blocks per grid step instead of the full flattened state.
     bsel = np.nonzero(global_tier)[0]
     nb = int(bsel.size)
-    nb_pad = -(-nb // tile_size) * tile_size if nb else 0
-    boundary_u = np.full((nb_pad,), -1, np.int32)
-    boundary_v = np.full((nb_pad,), -1, np.int32)
-    boundary_index = np.full((nb_pad,), -1, np.int32)
-    boundary_u[:nb] = u[bsel]
-    boundary_v[:nb] = v[bsel]
-    boundary_index[:nb] = bsel.astype(np.int32)
+    if nb:
+        ub, vb = u[bsel], v[bsel]
+        pu, pv = ub // window, vb // window
+        pair_key = pu * num_windows + pv
+        order_b = np.argsort(pair_key, kind="stable")
+        bsel, ub, vb = bsel[order_b], ub[order_b], vb[order_b]
+        pu, pv = pu[order_b], pv[order_b]
+        # pair run boundaries -> per-pair tile padding
+        starts_b = np.concatenate(
+            [[0], np.nonzero(np.diff(pair_key[order_b]))[0] + 1, [nb]]
+        )
+        sizes = np.diff(starts_b)
+        padded_sizes = -(-sizes // tile_size) * tile_size
+        nb_pad = int(padded_sizes.sum())
+        # grouped slot of in-pair position k of pair p: pad_start[p] + k
+        pad_starts = np.concatenate([[0], np.cumsum(padded_sizes)])[:-1]
+        slot_of = np.repeat(pad_starts - starts_b[:-1], sizes) + np.arange(nb)
+        boundary_u = np.full((nb_pad,), -1, np.int32)
+        boundary_v = np.full((nb_pad,), -1, np.int32)
+        boundary_index = np.full((nb_pad,), -1, np.int32)
+        boundary_ulocal = np.full((nb_pad,), -1, np.int32)
+        boundary_vlocal = np.full((nb_pad,), -1, np.int32)
+        boundary_u[slot_of] = ub
+        boundary_v[slot_of] = vb
+        boundary_index[slot_of] = bsel.astype(np.int32)
+        cross = pu != pv
+        boundary_ulocal[slot_of] = (ub - pu * window).astype(np.int32)
+        boundary_vlocal[slot_of] = (
+            vb - pv * window + np.where(cross, window, 0)
+        ).astype(np.int32)
+        # per-tile pair block ids (every tile sits inside one pair group)
+        nb_tiles = nb_pad // tile_size
+        blk_of_pair_tile = np.repeat(
+            np.arange(len(sizes)), padded_sizes // tile_size
+        )
+        boundary_blk_u = pu[starts_b[:-1]][blk_of_pair_tile].astype(np.int32)
+        boundary_blk_v = pv[starts_b[:-1]][blk_of_pair_tile].astype(np.int32)
+        assert boundary_blk_u.shape == (nb_tiles,)
+    else:
+        nb_pad = 0
+        boundary_u = boundary_v = boundary_index = np.zeros((0,), np.int32)
+        boundary_ulocal = boundary_vlocal = np.zeros((0,), np.int32)
+        boundary_blk_u = boundary_blk_v = np.zeros((0,), np.int32)
 
     # stream -> decision-slot gather map (see WindowSchedule.stream_src)
     slots_flat = num_rows * slots
     stream_src = np.full((m,), slots_flat + nb_pad, np.int32)
     rr, ss = np.nonzero(edge_index >= 0)
     stream_src[edge_index[rr, ss]] = (rr * slots + ss).astype(np.int32)
-    stream_src[bsel] = (slots_flat + np.arange(nb)).astype(np.int32)
+    if nb:
+        stream_src[bsel] = (slots_flat + slot_of).astype(np.int32)
 
     return WindowSchedule(
         window=window,
@@ -284,6 +362,10 @@ def build_window_schedule(
         boundary_u=boundary_u,
         boundary_v=boundary_v,
         boundary_index=boundary_index,
+        boundary_ulocal=boundary_ulocal,
+        boundary_vlocal=boundary_vlocal,
+        boundary_blk_u=boundary_blk_u,
+        boundary_blk_v=boundary_blk_v,
         window_ids=dense_ids.astype(np.int32),
         reorder=reorder,
         perm=perm,

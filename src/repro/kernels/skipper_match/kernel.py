@@ -12,10 +12,13 @@ TPU mapping of the paper's hot loop (Alg. 1 lines 5-18). Three entry points:
   exactly once per window — zero host round-trips for the full graph. TPU
   grids iterate the LAST dimension innermost, which is what makes the
   residency work.
-* ``build_boundary_matcher`` — 1-D grid over the global-tier tiles
-  (cross-window + coalesced sparse-window edges) with the FULL flattened
-  state VMEM-resident; the epilogue's decisions are ``engine.tile_pass``
-  verbatim, so the jnp reference epilogue stays bit-identical.
+* ``build_boundary_matcher`` — scalar-prefetch 1-D grid over the global-tier
+  tiles (cross-window + coalesced sparse-window edges), block-pair grouped
+  by the host schedule (``graphs/windows.py``; DESIGN.md §10): each grid
+  step DMAs only the TWO ``window``-sized state blocks its pair touches
+  into a (2, W) VMEM scratch — O(window) VMEM, independent of V — and the
+  pair tile is ``engine.tile_pass_pair``'s concatenated-state tile, so the
+  jnp reference epilogue stays bit-identical by construction.
 
 Both wrap the same per-tile body. The first-claim decision logic (conflict
 matrix + commit rule) is ``core/engine.py`` — shared verbatim with the jnp
@@ -50,6 +53,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import engine
 from repro.core.engine import MCHD
@@ -163,18 +167,14 @@ def skipper_pipeline_kernel(
     def _init():
         state_ref[...] = state_in_ref[...]
 
-    # views over the [W]-vector / [T]-vector payloads of the (1, ·) blocks
-    class _Row:
-        """[W]-vector view of the (1, W) state block (keeps _match_tile 1-D)."""
+    # [W]-vector view of the (1, W) state block (keeps _match_tile 1-D)
+    def _set_row(value):
+        state_ref[0, :] = value
 
-        def __getitem__(self, _):
-            return state_ref[0, :]
-
-        def __setitem__(self, _, value):
-            state_ref[0, :] = value
+    row = engine.StateCell(get=lambda: state_ref[0, :], set=_set_row)
 
     matched, conflicts = _match_tile(
-        u_ref[0, :], v_ref[0, :], _Row(),
+        u_ref[0, :], v_ref[0, :], row,
         vector_rounds=vector_rounds, window=window, fallback=fallback,
     )
     matched_ref[0, :] = matched.astype(jnp.int32)
@@ -182,96 +182,149 @@ def skipper_pipeline_kernel(
 
 
 def skipper_boundary_kernel(
+    blk_u_ref,
+    blk_v_ref,
     u_ref,
     v_ref,
     state_in_ref,
     state_ref,
     matched_ref,
     conflicts_ref,
+    pair_ref,
+    sem_u,
+    sem_v,
     *,
     vector_rounds: int,
-    n_flat: int,
-    conflict_method: str,
+    window: int,
+    fallback: bool,
 ):
-    """One grid step = one tile of T global-tier edges (cross-window +
-    coalesced sparse-window) against the FULL flattened state.
+    """One grid step = one tile of T global-tier edges, all sharing ONE
+    (window-block of u, window-block of v) pair — the host schedule groups
+    the stream so this holds by construction (``graphs/windows.py``,
+    DESIGN.md §10).
 
-    The state BlockSpec index map is constant, so the whole [n_flat] state
-    vector stays VMEM-resident across all boundary tiles and is written back
-    to HBM once — the epilogue joins the windowed sweep as device-resident
-    code instead of a host-level jnp scan. Decision logic is exactly
-    ``engine.tile_pass`` (shared first-claim rounds + greedy fallback), so
-    the jnp reference epilogue in ops.py is bit-identical by construction.
+    blk_u_ref/blk_v_ref are the scalar-prefetch per-tile block ids; the full
+    [num_windows, window] state lives in ANY memory (HBM), aliased in/out,
+    and each step manually DMAs the pair's two state rows into the (2, W)
+    VMEM ``pair_ref`` scratch. Edge ids are OFFSET-LOCAL: u in [0, W), v in
+    [W, 2W) for cross-block pairs and [0, W) for same-block pairs, so the
+    scratch viewed as a flat [2W] vector is exactly the concatenated state of
+    ``engine.tile_pass_pair`` — the jnp reference epilogue is bit-identical
+    by construction, and the gather/scatter are one-hot matmuls like the
+    windowed kernel (no dynamic fancy indexing: this is what un-blocks real
+    Mosaic lowering, the former ROADMAP caveat).
 
-    VMEM: n_flat * 4 B for the state (e.g. 64 KiB at n=16k, 4 MiB at n=1M)
-    plus the T x T share matrix — the full-state residency bounds the graph
-    size per core; shard the graph (core/distributed.py) beyond that.
+    Aliasing contract: writes go back v-row first, u-row second, both before
+    the step ends (DMA waits serialize them), so a later pair (b, c) reads
+    the commits of an earlier pair (a, b), and same-block pairs — which load
+    only the u row and leave the v half of the scratch untouched — store the
+    u row last so it wins unconditionally.
 
-    Compiled-Mosaic caveat (untested here — CPU CI only exercises
-    interpret=True): tile_pass's state gather/scatter are dynamic fancy
-    indexing, which Mosaic may refuse to lower even though the blocked
-    predicate is forced to the matrix form below. If real-TPU lowering
-    fails, this kernel needs the scalar-prefetch two-window-block design
-    from ROADMAP.md (gather/scatter become block loads + one-hot matmuls
-    like the windowed kernel); the driver-level contract (second kernel,
-    one compilation unit, bit-identical to the jnp scan) is unchanged.
+    VMEM per grid step: 2 * window * 4 B of state + the T x (2W) one-hots +
+    the T x T share matrix — O(window + tile^2), independent of V.
     """
     i = pl.program_id(0)
+    bu = blk_u_ref[i]
+    bv = blk_v_ref[i]
 
-    @pl.when(i == 0)
-    def _init():
-        state_ref[...] = state_in_ref[...]
+    cp_u = pltpu.make_async_copy(state_ref.at[bu], pair_ref.at[0], sem_u)
+    cp_u.start()
+    cp_u.wait()
 
-    state, matched, conflicts, _fb = engine.tile_pass(
-        state_ref[...], u_ref[...], v_ref[...],
-        n=n_flat, vector_rounds=vector_rounds, conflict_method=conflict_method,
+    @pl.when(bv != bu)
+    def _load_v():
+        cp = pltpu.make_async_copy(state_ref.at[bv], pair_ref.at[1], sem_v)
+        cp.start()
+        cp.wait()
+
+    # flat [2W] view of the scratch = tile_pass_pair's concatenated state
+    def _set_pair(value):
+        pair_ref[...] = value.reshape(2, window)
+
+    cell = engine.StateCell(
+        get=lambda: pair_ref[...].reshape(2 * window), set=_set_pair
     )
-    state_ref[...] = state
-    matched_ref[...] = matched.astype(jnp.int32)
-    conflicts_ref[...] = conflicts
+
+    matched, conflicts = _match_tile(
+        u_ref[0, :], v_ref[0, :], cell,
+        vector_rounds=vector_rounds, window=2 * window, fallback=fallback,
+    )
+    matched_ref[0, :] = matched.astype(jnp.int32)
+    conflicts_ref[0, :] = conflicts
+
+    # write-back: v row first, u row second (same-block pairs skip v and the
+    # u row — the only row touched — lands last; see tile_pass_pair)
+    @pl.when(bv != bu)
+    def _store_v():
+        cp = pltpu.make_async_copy(pair_ref.at[1], state_ref.at[bv], sem_v)
+        cp.start()
+        cp.wait()
+
+    cp_u2 = pltpu.make_async_copy(pair_ref.at[0], state_ref.at[bu], sem_u)
+    cp_u2.start()
+    cp_u2.wait()
 
 
+@functools.lru_cache(maxsize=None)
 def build_boundary_matcher(
     num_tiles: int,
     tile_size: int,
-    n_flat: int,
+    num_windows: int,
+    window: int,
     vector_rounds: int = 1,
+    fallback: bool = True,
     interpret: bool = True,
 ):
-    """Construct the pallas_call resolving the global-tier stream: u/v are
-    int32[num_tiles * tile_size] renumbered-global ids (-1 padding), state0
-    is the int32[n_flat] flattened post-sweep state. Returns (state, matched,
-    conflicts)."""
+    """Construct the scalar-prefetch pallas_call resolving the block-pair
+    grouped global-tier stream.
+
+    Call as ``fn(blk_u, blk_v, u, v, state)`` with blk_u/blk_v
+    int32[num_tiles] pair block ids (scalar-prefetched), u/v
+    int32[num_tiles, tile_size] OFFSET-LOCAL ids (-1 padding), and state
+    int32[num_windows, window] (aliased in/out — the caller's buffer is
+    donated). Returns (state, matched, conflicts) with matched/conflicts
+    shaped [num_tiles, tile_size]. Cached per static shape so repeated
+    driver calls reuse one pallas_call (and one trace)."""
     kernel = functools.partial(
         skipper_boundary_kernel,
         vector_rounds=vector_rounds,
-        n_flat=n_flat,
-        # identical function either way (engine docstring); compiled Mosaic
-        # lacks sort/scatter, interpret mode takes the fast adaptive path.
-        conflict_method="auto" if interpret else "matrix",
+        window=window,
+        fallback=fallback,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((1, tile_size), lambda i, bu, bv: (i, 0)),  # u tiles
+            pl.BlockSpec((1, tile_size), lambda i, bu, bv: (i, 0)),  # v tiles
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),     # state
+        ],
+        out_specs=[
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),     # state
+            pl.BlockSpec((1, tile_size), lambda i, bu, bv: (i, 0)),  # matched
+            pl.BlockSpec((1, tile_size), lambda i, bu, bv: (i, 0)),  # conflicts
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, window), jnp.int32),  # the pair's two state rows
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
     )
     return pl.pallas_call(
         kernel,
-        grid=(num_tiles,),
-        in_specs=[
-            pl.BlockSpec((tile_size,), lambda i: (i,)),      # u tiles
-            pl.BlockSpec((tile_size,), lambda i: (i,)),      # v tiles
-            pl.BlockSpec((n_flat,), lambda i: (0,)),         # initial state
-        ],
-        out_specs=[
-            pl.BlockSpec((n_flat,), lambda i: (0,)),         # state (resident)
-            pl.BlockSpec((tile_size,), lambda i: (i,)),      # matched
-            pl.BlockSpec((tile_size,), lambda i: (i,)),      # conflicts
-        ],
+        grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((n_flat,), jnp.int32),
-            jax.ShapeDtypeStruct((num_tiles * tile_size,), jnp.int32),
-            jax.ShapeDtypeStruct((num_tiles * tile_size,), jnp.int32),
+            jax.ShapeDtypeStruct((num_windows, window), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles, tile_size), jnp.int32),
+            jax.ShapeDtypeStruct((num_tiles, tile_size), jnp.int32),
         ],
+        # state input (after the 2 prefetch scalars + u + v) -> state output
+        input_output_aliases={4: 0},
         interpret=interpret,
     )
 
 
+@functools.lru_cache(maxsize=None)
 def build_window_matcher(
     num_tiles: int,
     tile_size: int,
@@ -310,6 +363,7 @@ def build_window_matcher(
     )
 
 
+@functools.lru_cache(maxsize=None)
 def build_pipeline_matcher(
     num_windows: int,
     tiles_per_window: int,

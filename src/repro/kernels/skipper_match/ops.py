@@ -8,10 +8,11 @@
     then ONE traced function covers the whole graph: a single ``pallas_call``
     over the 2-D (row, tile) grid of dense windows — the vertex-state block
     revolves through VMEM per window, no host round-trips — followed by an
-    in-device first-claim epilogue (a second Pallas kernel with the full
-    state VMEM-resident; ``engine.tile_pass`` scan on the xla twin) that
-    resolves the global tier (cross-window + coalesced sparse-window edges)
-    against the full state. Every edge is still decided exactly once;
+    in-device first-claim epilogue (a second, scalar-prefetch Pallas kernel
+    streaming only the TWO window-sized state blocks each block-pair tile
+    touches; ``engine.tile_pass_pair`` scan on the xla twin) that resolves
+    the block-pair grouped global tier (cross-window + coalesced
+    sparse-window edges). Every edge is still decided exactly once;
     Counters are computed on device; mask/conflicts/state come back in
     original stream order / vertex ids even when the schedule is reordered.
 
@@ -108,7 +109,7 @@ def _build_pipeline(
     nb_tiles = num_boundary_padded // tile_size
     m = num_edges
 
-    def pipeline(u2, v2, src, bu, bv, row_ids, perm):
+    def pipeline(u2, v2, src, blk_u, blk_v, bu, bv, row_ids, perm):
         global _PIPELINE_TRACES
         _PIPELINE_TRACES += 1  # trace-time side effect (compilation counter)
 
@@ -127,40 +128,44 @@ def _build_pipeline(
         # Rows hold only the dense windows: scatter them into the full
         # [num_windows, window] state (coalesced windows stay all-ACC — their
         # edges are decided by the epilogue below). The xla twin switches to
-        # the uint8 at-rest encoding here (quarters the epilogue's
-        # full-state traffic); the Pallas boundary kernel keeps the VMEM
-        # int32.
+        # the uint8 at-rest encoding here (quarters the epilogue's HBM
+        # traffic); the Pallas boundary kernel keeps the VMEM int32.
         state_dt = jnp.int32 if backend == "pallas" else jnp.uint8
         flat = (
             jnp.zeros((num_windows, window), state_dt)
             .at[row_ids].set(state2.astype(state_dt))
-            .reshape(n_flat)
         )
 
-        # Global-tier epilogue: cross-window + coalesced edges against the
-        # full flattened state, same first-claim tile pass, still inside this
+        # Global-tier epilogue: the block-pair grouped cross-window +
+        # coalesced edges, same first-claim tile pass, still inside this
         # trace. On the pallas path this is the second kernel of the
-        # compilation unit (full state VMEM-resident across its tiles); the
-        # xla twin runs the bit-identical tile_pass scan.
+        # compilation unit — a scalar-prefetch grid that DMAs only the two
+        # state rows each pair tile touches (O(window) VMEM, DESIGN.md §10);
+        # the xla twin runs the bit-identical tile_pass_pair scan over the
+        # same offset-local tiles.
         if nb_tiles:
+            but = bu.reshape(nb_tiles, tile_size)
+            bvt = bv.reshape(nb_tiles, tile_size)
             if backend == "pallas":
                 bcall = build_boundary_matcher(
-                    nb_tiles, tile_size, n_flat, vector_rounds, interpret
+                    nb_tiles, tile_size, num_windows, window,
+                    vector_rounds, True, interpret,
                 )
-                flat, bmt, bcf = bcall(bu, bv, flat)
+                flat, bmt, bcf = bcall(blk_u, blk_v, but, bvt, flat)
             else:
-                but = bu.reshape(nb_tiles, tile_size)
-                bvt = bv.reshape(nb_tiles, tile_size)
 
-                def bstep(st, uv):
-                    st, mt, cf, _fb = engine.tile_pass(
-                        st, uv[0], uv[1], n=n_flat,
+                def bstep(rows, xs):
+                    uloc, vloc, pbu, pbv = xs
+                    rows, mt, cf, _fb = engine.tile_pass_pair(
+                        rows, uloc, vloc, pbu, pbv, window=window,
                         vector_rounds=vector_rounds,
                         conflict_method=conflict_method,
                     )
-                    return st, (mt, cf)
+                    return rows, (mt, cf)
 
-                flat, (bmt, bcf) = jax.lax.scan(bstep, flat, (but, bvt))
+                flat, (bmt, bcf) = jax.lax.scan(
+                    bstep, flat, (but, bvt, blk_u, blk_v)
+                )
 
         # Gather slot-order decisions back to stream order through the
         # host-precomputed map (``WindowSchedule.stream_src``): decision
@@ -187,7 +192,7 @@ def _build_pipeline(
         )
         # back to ORIGINAL vertex ids: original vertex i lives at renumbered
         # slot perm[i] of the flattened state (perm = arange when unordered).
-        state_out = flat[perm].astype(STATE_DTYPE)
+        state_out = flat.reshape(n_flat)[perm].astype(STATE_DTYPE)
         return mask, state_out, conf, counters
 
     return jax.jit(pipeline)
@@ -250,8 +255,10 @@ def skipper_match(
         jnp.asarray(schedule.u_tiles),
         jnp.asarray(schedule.v_tiles),
         jnp.asarray(schedule.stream_src),
-        jnp.asarray(schedule.boundary_u),
-        jnp.asarray(schedule.boundary_v),
+        jnp.asarray(schedule.boundary_blk_u),
+        jnp.asarray(schedule.boundary_blk_v),
+        jnp.asarray(schedule.boundary_ulocal),
+        jnp.asarray(schedule.boundary_vlocal),
         jnp.asarray(schedule.window_ids),
         jnp.asarray(perm),
     )
