@@ -267,7 +267,15 @@ def distributed_worker(scale: str, smoke: bool, reorder: str) -> None:
     assert jax.default_backend() == "cpu", jax.default_backend()
     assert len(jax.devices()) == 4, jax.devices()
     from repro.core.distributed import distributed_skipper
+    from repro.core.faults import FaultPlan
     from repro.graphs import partition_schedule
+
+    # Active-but-inert plan: truncate_retry far above any retry capacity, so
+    # the compiled work is identical to the plain row — the cell times what
+    # the fault-harness plumbing itself costs (threading a plan through the
+    # compile cache + the policy epilogue). check_regression gates this
+    # against the plain pipeline row at 2%.
+    inert = FaultPlan(seed=0, truncate_retry=1 << 30)
 
     specs, window, tile, block, iters = _distributed_cases(scale, smoke)
     rows, extras = [], {}
@@ -287,6 +295,10 @@ def distributed_worker(scale: str, smoke: bool, reorder: str) -> None:
             (f"kernel/distributed_pipeline/{name}",
              lambda ds=ds, c=f"kernel/distributed_pipeline/{name}": keep(
                  c, distributed_skipper(device_schedule=ds, tile_size=tile))),
+            (f"kernel/distributed_pipeline_hooks/{name}",
+             lambda ds=ds, c=f"kernel/distributed_pipeline_hooks/{name}": keep(
+                 c, distributed_skipper(device_schedule=ds, tile_size=tile,
+                                        faults=inert))),
             (f"kernel/distributed_jnp_local/{name}",
              lambda g=g, c=f"kernel/distributed_jnp_local/{name}": keep(
                  c, distributed_skipper(g, block_size=block, tile_size=tile))),
@@ -295,6 +307,19 @@ def distributed_worker(scale: str, smoke: bool, reorder: str) -> None:
         for _ in range(iters + 1):  # first pass = warmup/compile
             for cell, fn in cells:
                 times[cell].append(time_call(fn, warmup=0, iters=1))
+        # one NON-timed verified run: a fault-free bench must report zero on
+        # every recovery field (check_regression hard-fails otherwise —
+        # nonzero here means the matcher silently dropped work)
+        _, vstats = distributed_skipper(
+            g, device_schedule=ds, tile_size=tile,
+            on_fault="report", verify=True,
+        )
+        recovery = {
+            k: int(getattr(vstats, k)) for k in (
+                "recovery_attempts", "residual_edges",
+                "recovered_matches", "corrupted_cells",
+            )
+        }
         for cell, _ in cells:
             t = min(times[cell][1:])
             gints = int(last[cell].gathered_ints)
@@ -306,6 +331,7 @@ def distributed_worker(scale: str, smoke: bool, reorder: str) -> None:
                     "intra": round(sched.intra_fraction, 4),
                     "gathered_ints": gints,
                     "num_devices": 4,
+                    **recovery,
                 }
             else:
                 derived = f"{m / t / 1e6:.1f}Medges_s"

@@ -5,6 +5,12 @@ from repro.core.types import ACC, RSVD, MCHD, Counters, MatchResult
 from repro.core.sgmm import sgmm
 from repro.core.skipper import skipper
 from repro.core.ems import ems_israeli_itai, ems_idmm, sidmm
+from repro.core.faults import (
+    FaultPlan,
+    RecoveryReport,
+    detect_residual,
+    residual_replay,
+)
 from repro.core.validate import check_matching, assert_matching
 from repro.core.bipartite import bmatch_assign
 from repro.core.conflicts import conflict_table
@@ -20,6 +26,10 @@ __all__ = [
     "ems_israeli_itai",
     "ems_idmm",
     "sidmm",
+    "FaultPlan",
+    "RecoveryReport",
+    "detect_residual",
+    "residual_replay",
     "check_matching",
     "assert_matching",
     "bmatch_assign",

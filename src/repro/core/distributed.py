@@ -63,19 +63,39 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 from repro.core.types import ACC, MCHD, STATE_DTYPE, Counters, MatchResult
-from repro.core.engine import tile_pass, window_tier_pass
+from repro.core.engine import stream_pass, window_tier_pass
+from repro.core.faults import (
+    CORRUPT,
+    FaultPlan,
+    corruption_mask,
+    detect_residual,
+    proposal_drop_mask,
+    residual_replay,
+)
+from repro.core.validate import check_matching
 from repro.graphs.types import EdgeList
 from repro.graphs.partition import (
     DeviceSchedule,
     dispersed_blocks,
     locality_device_schedule,
+    partition_schedule,
 )
 from repro.graphs.windows import WindowSchedule
+
+# bounded in-protocol escalation: at most this many re-runs with regrown
+# knobs before the ladder drops to the residual replay (DESIGN.md §11)
+_MAX_ESCALATIONS = 2
 
 
 @dataclasses.dataclass(frozen=True)
 class DistStats:
-    """Per-run distributed accounting (aggregated over devices)."""
+    """Per-run distributed accounting (aggregated over devices).
+
+    The last four fields are the degradation ledger (DESIGN.md §11) —
+    always zero on a healthy ``on_fault="raise"`` run; filled by
+    ``on_fault="report"`` (detection only), ``on_fault="recover"`` (what the
+    ladder did), and ``verify=True``.
+    """
 
     proposals: jax.Array        # total proposals sent
     lost_proposals: jax.Array   # proposals that lost replay (cross-device JIT conflicts)
@@ -83,43 +103,37 @@ class DistStats:
     retry_overflow: jax.Array   # edges dropped by a full retry buffer (must be 0)
     undrained: jax.Array        # retry entries alive after drain rounds (must be 0)
     gathered_ints: jax.Array    # collective payload (int32 count) over the run
+    recovery_attempts: jax.Array | int = 0  # ladder steps that did real work
+    residual_edges: jax.Array | int = 0     # valid edges left undecided
+    recovered_matches: jax.Array | int = 0  # matches added by the replay
+    corrupted_cells: jax.Array | int = 0    # out-of-domain state bytes seen
 
     @property
     def ok(self) -> bool:
         """True iff the must-be-zero invariants actually held: no retry
         overflow (a dropped edge can silently break maximality) and nothing
-        left undrained. ``distributed_skipper(check=True)`` raises on the
-        spot; callers running ``check=False`` must test this flag."""
-        return int(self.retry_overflow) == 0 and int(self.undrained) == 0
+        left undrained. ``distributed_skipper(on_fault="raise")`` raises on
+        the spot; callers running ``on_fault="report"`` must test this flag.
+
+        NOTE: reading the flag synchronizes — it blocks on the device
+        computation via one ``jax.device_get`` of both counters (one
+        transfer, not one blocking ``int()`` per field)."""
+        ovf, und = jax.device_get((self.retry_overflow, self.undrained))
+        return int(ovf) == 0 and int(und) == 0
 
     def raise_if_bad(self) -> None:
-        if not self.ok:
+        """Raise ``RuntimeError`` if a must-be-zero invariant tripped.
+        Synchronizes, like :attr:`ok` (single ``device_get``)."""
+        ovf, und = jax.device_get((self.retry_overflow, self.undrained))
+        if int(ovf) != 0 or int(und) != 0:
             raise RuntimeError(
                 "distributed matching violated its must-be-zero invariants: "
-                f"retry_overflow={int(self.retry_overflow)} (edges dropped by "
-                f"a full retry buffer), undrained={int(self.undrained)} "
+                f"retry_overflow={int(ovf)} (edges dropped by "
+                f"a full retry buffer), undrained={int(und)} "
                 "(retry entries alive after the drain rounds) — the matching "
-                "may be non-maximal. Increase block_size and/or drain_rounds."
+                "may be non-maximal. Increase block_size and/or drain_rounds, "
+                "or run on_fault='recover' to complete the matching."
             )
-
-
-def _local_pass(state, u, v, *, n, vector_rounds, tile_size):
-    """Greedy pass of a [L]-sized slab in tiles. Returns (post local state,
-    matched mask, conflicts)."""
-    l = u.shape[0]
-    num_tiles = l // tile_size
-    ut = u.reshape(num_tiles, tile_size)
-    vt = v.reshape(num_tiles, tile_size)
-
-    def step(st, uv):
-        uu, vv = uv
-        st, matched, conflicts, _ = tile_pass(
-            st, uu, vv, n=n, vector_rounds=vector_rounds
-        )
-        return st, (matched, conflicts)
-
-    state, (matched, conflicts) = jax.lax.scan(step, state, (ut, vt))
-    return state, matched.reshape(-1), conflicts.reshape(-1)
 
 
 def _make_round_fn(
@@ -132,6 +146,7 @@ def _make_round_fn(
     tile_size: int,
     block: int,
     edge_lookup=None,
+    faults: Optional[FaultPlan] = None,
 ):
     """Build the four-step round body shared by both distributed schedules.
 
@@ -153,11 +168,24 @@ def _make_round_fn(
     moves one int per slot instead of three (u, v, idx) and receivers
     reconstruct the endpoints locally. The dispersed path keeps the 3-int
     proposals (its raw stream is sharded, not replicated).
+
+    ``faults``: optional :class:`FaultPlan`, trace-time gated — ``None``
+    (the default) adds zero ops. ``drop_proposals`` drops gather slots the
+    local pass believes it sent (the silent-loss failure mode: the edge is
+    neither replayed nor requeued); ``lose_shard`` swallows one device's
+    proposals wholesale; ``truncate_retry`` shrinks the retry buffer's
+    effective capacity so requeues overflow.
     """
     cap = block  # retry buffer capacity
+    cap_eff = cap
+    if faults is not None and faults.truncate_retry is not None:
+        cap_eff = min(cap, faults.truncate_retry)
     slab = block + cap
     slab_pad = (-slab) % tile_size
     slab_t = slab + slab_pad
+    dmask = None
+    if faults is not None and faults.drop_proposals > 0.0:
+        dmask = proposal_drop_mask(faults, mask_len)
 
     def one_round(carry, blk):
         state, mask, ru, rv, ri, stats = carry
@@ -167,7 +195,7 @@ def _make_round_fn(
         u = jnp.concatenate([ru, bu, jnp.full((slab_pad,), -1, jnp.int32)])
         v = jnp.concatenate([rv, bv, jnp.full((slab_pad,), -1, jnp.int32)])
         idx = jnp.concatenate([ri, bi, jnp.full((slab_pad,), -1, jnp.int32)])
-        local_state, proposed, local_conf = _local_pass(
+        local_state, proposed, local_conf = stream_pass(
             state, u, v, n=n, vector_rounds=vector_rounds, tile_size=tile_size
         )
         valid = (u >= 0) & (u != v)
@@ -180,7 +208,17 @@ def _make_round_fn(
         # 2. GATHER proposals; position-major (round-robin across devices)
         # deterministic order. With a replicated stream lookup, a proposal
         # is just its stream index (1 int); otherwise (u, v, idx).
-        pi = jnp.where(proposed, idx, -1)
+        sent = proposed
+        if dmask is not None:
+            # FAULT: drop the slot on the wire — this device still believes
+            # it proposed (dead_prov stays False), so the edge is lost
+            sent = sent & ~dmask[jnp.clip(idx, 0, mask_len - 1)]
+        if faults is not None and faults.lose_shard is not None:
+            lost = jax.lax.axis_index(axis_name) == (
+                faults.lose_shard % num_devices
+            )
+            sent = sent & ~lost
+        pi = jnp.where(sent, idx, -1)
         gi = jax.lax.all_gather(pi, axis_name).T.reshape(-1)  # [D * slab_t]
         if edge_lookup is not None:
             lu, lv = edge_lookup
@@ -190,14 +228,14 @@ def _make_round_fn(
             gv = jnp.where(live, lv[gj], -1)
             round_gints = slab_t * num_devices
         else:
-            pu = jnp.where(proposed, u, -1)
-            pv = jnp.where(proposed, v, -1)
+            pu = jnp.where(sent, u, -1)
+            pv = jnp.where(sent, v, -1)
             gu = jax.lax.all_gather(pu, axis_name).T.reshape(-1)
             gv = jax.lax.all_gather(pv, axis_name).T.reshape(-1)
             round_gints = 3 * slab_t * num_devices
 
         # 3. REPLAY on the committed state (deterministic first-claim order)
-        new_state, winners, _ = _local_pass(
+        new_state, winners, _ = stream_pass(
             state, gu, gv, n=n, vector_rounds=vector_rounds, tile_size=tile_size
         )
         mask = mask.at[jnp.where(winners, gi, mask_len)].set(True, mode="drop")
@@ -211,8 +249,15 @@ def _make_round_fn(
         ru_n = jnp.where(requeue[order], u[order], -1)[:cap]
         rv_n = jnp.where(requeue[order], v[order], -1)[:cap]
         ri_n = jnp.where(requeue[order], idx[order], -1)[:cap]
+        if cap_eff < cap:
+            # FAULT: truncated retry buffer — entries past the effective
+            # capacity are dropped on the floor and counted as overflow
+            keep = jnp.arange(cap, dtype=jnp.int32) < cap_eff
+            ru_n = jnp.where(keep, ru_n, -1)
+            rv_n = jnp.where(keep, rv_n, -1)
+            ri_n = jnp.where(keep, ri_n, -1)
         nreq = jnp.sum(requeue)
-        overflow = jnp.maximum(nreq - cap, 0)
+        overflow = jnp.maximum(nreq - cap_eff, 0)
 
         # real-work accounting: only valid slots count (padding/sentinel
         # slots scanned during padded slabs and drain rounds are free);
@@ -284,6 +329,7 @@ def dispersed_skipper_fn(
     vector_rounds: int,
     tile_size: int,
     drain_rounds: int,
+    faults: Optional[FaultPlan] = None,
 ) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, ...]]:
     """Per-device body of the dispersed (raw stream block) schedule."""
     n = num_vertices
@@ -301,9 +347,17 @@ def dispersed_skipper_fn(
         vector_rounds=vector_rounds,
         tile_size=tile_size,
         block=block,
+        faults=faults,
     )
 
     state0 = jnp.full((n,), ACC, STATE_DTYPE)
+    if faults is not None and faults.corrupt_state > 0.0:
+        # FAULT: out-of-domain bytes in the committed state — the affected
+        # vertices look permanently non-free (neither ACC nor MCHD), so
+        # every edge on them dies without being decided
+        state0 = jnp.where(
+            corruption_mask(faults, n), jnp.asarray(CORRUPT, STATE_DTYPE), state0
+        )
     mask0 = jnp.zeros((num_edges_padded,), jnp.bool_)
     empty = jnp.full((block,), -1, jnp.int32)
     carry0 = (state0, mask0, empty, empty, empty, _zero_stats())
@@ -339,6 +393,7 @@ def locality_sharded_fn(
     drain_rounds: int,
     backend: str,
     interpret: bool,
+    faults: Optional[FaultPlan] = None,
 ):
     """Per-device body of the locality-sharded schedule.
 
@@ -379,6 +434,15 @@ def locality_sharded_fn(
         interpret=interpret,
     )
     w_valid = u_rows >= 0
+    if faults is not None and faults.lose_shard is not None:
+        # FAULT: lost shard — this device's whole window-tier contribution
+        # (state rows AND matched bits, kept consistent) vanishes before the
+        # psum; its global-tier proposals are swallowed in _make_round_fn
+        lost = jax.lax.axis_index(axis_name) == (
+            faults.lose_shard % num_devices
+        )
+        states = jnp.where(lost, jnp.zeros_like(states), states)
+        matched_w = jnp.where(lost, jnp.zeros_like(matched_w), matched_w)
     # assemble the committed full state: scatter this device's rows into
     # schedule-row order (disjoint across devices), psum, then place rows at
     # their window ids (two-tier compaction; coalesced windows stay all-ACC
@@ -395,6 +459,15 @@ def locality_sharded_fn(
         .reshape(n_flat)
         .astype(STATE_DTYPE)
     )
+    if faults is not None and faults.corrupt_state > 0.0:
+        # FAULT: corrupt the assembled committed state (renumbered-flat id
+        # space) before the global tier reads it — identical injection site
+        # to the single-device pipeline's
+        flat = jnp.where(
+            corruption_mask(faults, n_flat),
+            jnp.asarray(CORRUPT, STATE_DTYPE),
+            flat,
+        )
 
     # ---- PHASE B: global tier via propose/gather/replay -----------------
     num_rounds, block = bu_blocks.shape
@@ -422,6 +495,7 @@ def locality_sharded_fn(
             tile_size=tile_size,
             block=block,
             edge_lookup=(boundary_lu, boundary_lv),
+            faults=faults,
         )
         mask0 = jnp.zeros((num_boundary_padded,), jnp.bool_)
         empty = jnp.full((block,), -1, jnp.int32)
@@ -451,11 +525,12 @@ def locality_sharded_fn(
 @lru_cache(maxsize=32)
 def _compiled_dispersed(
     mesh, axis_name, num_devices, num_vertices, num_edges_padded,
-    vector_rounds, tile_size, drain_rounds,
+    vector_rounds, tile_size, drain_rounds, faults=None,
 ):
     """One compiled shard_map per static config — rebuilding shard_map+jit
     per call would retrace/recompile every time (~100x the actual run time
-    on the bench graphs). Mesh is hashable and participates in the key."""
+    on the bench graphs). Mesh is hashable and participates in the key, as
+    does the (frozen, default-None) fault plan."""
     fn = partial(
         dispersed_skipper_fn,
         num_vertices=num_vertices,
@@ -465,6 +540,7 @@ def _compiled_dispersed(
         vector_rounds=vector_rounds,
         tile_size=tile_size,
         drain_rounds=drain_rounds,
+        faults=faults,
     )
     shard = compat.shard_map(
         fn,
@@ -480,10 +556,11 @@ def _compiled_dispersed(
 def _compiled_sharded(
     mesh, axis_name, num_devices, window, tiles_per_window, tile_size,
     num_rows, num_windows, num_boundary_padded, vector_rounds, drain_rounds,
-    backend, interpret,
+    backend, interpret, faults=None,
 ):
     """Compiled locality-sharded body per static schedule shape (the
-    schedule ARRAYS are runtime inputs, including window_ids)."""
+    schedule ARRAYS are runtime inputs, including window_ids); the frozen
+    fault plan (default None) is part of the static key."""
     fn = partial(
         locality_sharded_fn,
         window=window,
@@ -498,6 +575,7 @@ def _compiled_sharded(
         drain_rounds=drain_rounds,
         backend=backend,
         interpret=interpret,
+        faults=faults,
     )
     shard = compat.shard_map(
         fn,
@@ -520,10 +598,10 @@ def _mesh_and_devices(mesh: Optional[Mesh], axis_name: str):
     return mesh, num_devices
 
 
-def _finalize(mask, state, stats, check):
-    """Shared host-level epilogue: counters, stats, invariant enforcement."""
+def _finalize(mask, state, stats):
+    """Shared host-level epilogue: counters + stats assembly (no policy —
+    ``_apply_policy`` owns raising / recovering / reporting)."""
     props, req, ovf, und, gints, reads, l_loc, l_rep, s_rep, wins = stats
-    n_match = jnp.sum(mask)
     lost = props - wins  # proposals that did not win the replay
     counters = Counters(
         edge_reads=reads.astype(jnp.int32),
@@ -540,8 +618,135 @@ def _finalize(mask, state, stats, check):
         undrained=und,
         gathered_ints=gints,
     )
-    if check:
-        dstats.raise_if_bad()
+    return result, dstats
+
+
+def _effective_knobs(block_size, drain_rounds, faults):
+    """The (retry capacity, drain rounds) a run ACTUALLY gets once the fault
+    plan has had its say — the ladder stops escalating a knob the plan pins
+    (regrowing a buffer the plan truncates right back is wasted work)."""
+    cap = block_size
+    if faults is not None and faults.truncate_retry is not None:
+        cap = min(cap, faults.truncate_retry)
+    dr = 0 if (faults is not None and faults.skip_drain) else drain_rounds
+    return cap, dr
+
+
+def _apply_policy(
+    run,
+    edges: Optional[EdgeList],
+    *,
+    on_fault: str,
+    verify: bool,
+    faults: Optional[FaultPlan],
+    block_size: int,
+    drain_rounds: int,
+    tile_size: int,
+    vector_rounds: int,
+) -> Tuple[MatchResult, DistStats]:
+    """The recovery ladder (DESIGN.md §11), shared by both schedules.
+
+    ``run(block_size, drain_rounds) -> (MatchResult, DistStats)`` re-executes
+    the protocol under escalated knobs (the sharded closure repartitions the
+    global-tier deal, the dispersed one re-deals the stream).
+
+    Policy:
+      * ``"raise"``  — the historical hard-fail: ``raise_if_bad()``.
+      * ``"report"`` — never raise; fill ``residual_edges`` /
+        ``corrupted_cells`` so the caller sees the damage (synchronizes).
+      * ``"recover"`` — rung 1: up to ``_MAX_ESCALATIONS`` re-runs,
+        geometrically regrowing whichever knob tripped (retry capacity on
+        ``retry_overflow``, drain rounds on ``undrained``), skipped when the
+        fault plan pins the knob; rung 2: ``faults.residual_replay`` —
+        rebuild state from the (always-valid) match mask and complete the
+        matching over the residual edges. Provably valid+maximal.
+
+    ``verify=True`` additionally runs ``check_matching`` on the final mask
+    (raises on failure under every policy — after ``"recover"`` a failure
+    is a bug in the ladder itself, and the error says so).
+    """
+    if on_fault not in ("raise", "recover", "report"):
+        raise ValueError(
+            f"on_fault must be 'raise', 'recover' or 'report', got {on_fault!r}"
+        )
+    if (verify or on_fault in ("recover", "report")) and edges is None:
+        raise ValueError(
+            "on_fault='recover'/'report' and verify=True need the original "
+            "edge list — pass edges even when a prebuilt schedule is given"
+        )
+
+    bs, dr = block_size, drain_rounds
+    result, dstats = run(bs, dr)
+    if on_fault == "raise":
+        if not verify:
+            dstats.raise_if_bad()
+        # with verify the check below subsumes raise_if_bad and reports the
+        # actual damage, not just the tripwire
+    elif on_fault == "recover":
+        attempts = 0
+        for _ in range(_MAX_ESCALATIONS):
+            ovf, und = jax.device_get(
+                (dstats.retry_overflow, dstats.undrained)
+            )
+            if int(ovf) == 0 and int(und) == 0:
+                break
+            nbs = bs * 2 if int(ovf) > 0 else bs
+            ndr = max(1, dr) * 2 if int(und) > 0 else dr
+            if _effective_knobs(nbs, ndr, faults) == _effective_knobs(
+                bs, dr, faults
+            ):
+                break  # the fault pins the knob — go straight to the replay
+            bs, dr = nbs, ndr
+            attempts += 1
+            result, dstats = run(bs, dr)
+        mask, state, residual, recovered, corrupted = residual_replay(
+            edges, result.match_mask, result.state,
+            tile_size=tile_size, vector_rounds=vector_rounds,
+        )
+        res_i, cor_i = jax.device_get((residual, corrupted))
+        if int(res_i) > 0 or int(cor_i) > 0:
+            attempts += 1  # the replay rung did real work
+        result = MatchResult(
+            match_mask=mask, state=state, counters=result.counters
+        )
+        dstats = dataclasses.replace(
+            dstats,
+            recovery_attempts=jnp.asarray(attempts, jnp.int32),
+            residual_edges=residual,
+            recovered_matches=recovered,
+            corrupted_cells=corrupted,
+        )
+
+    if on_fault == "report" or (verify and on_fault == "raise"):
+        residual, corrupted = detect_residual(
+            edges, result.match_mask, result.state
+        )
+        dstats = dataclasses.replace(
+            dstats, residual_edges=residual, corrupted_cells=corrupted
+        )
+
+    if verify:
+        chk = check_matching(edges, result.match_mask)
+        ok_v, ok_m, res_i, cor_i = (
+            int(x) for x in jax.device_get(
+                (chk["valid"], chk["maximal"],
+                 dstats.residual_edges, dstats.corrupted_cells)
+            )
+        )
+        if on_fault == "recover" and not (ok_v and ok_m):
+            raise RuntimeError(
+                "verify=True after on_fault='recover': recovered matching "
+                f"failed validation (valid={bool(ok_v)}, maximal={bool(ok_m)})"
+                " — this is a bug in the recovery ladder, please report it"
+            )
+        if on_fault == "raise" and not (ok_v and ok_m and res_i == 0
+                                        and cor_i == 0):
+            raise RuntimeError(
+                "verify=True: matching failed validation "
+                f"(valid={bool(ok_v)}, maximal={bool(ok_m)}, "
+                f"residual_edges={res_i}, corrupted_cells={cor_i}) — run "
+                "on_fault='recover' to complete it or 'report' to inspect"
+            )
     return result, dstats
 
 
@@ -559,7 +764,9 @@ def distributed_skipper(
     device_schedule: Optional[DeviceSchedule] = None,
     backend: Optional[str] = None,
     interpret: Optional[bool] = None,
-    check: bool = True,
+    on_fault: str = "raise",
+    verify: bool = False,
+    faults: Optional[FaultPlan] = None,
 ) -> Tuple[MatchResult, DistStats]:
     """Run Skipper across the devices of ``mesh`` along ``axis_name``.
 
@@ -577,12 +784,31 @@ def distributed_skipper(
     D=1 the locality-sharded output is bit-identical to
     ``skipper_match(schedule=..., backend=...)`` (test-pinned).
 
-    ``check=True`` (default) raises ``RuntimeError`` if the run violates the
-    must-be-zero invariants (``retry_overflow``/``undrained`` — a dropped or
-    undecided edge can break maximality); ``check=False`` returns the stats
-    for the caller to inspect (``DistStats.ok``).
+    Failure handling (DESIGN.md §11): ``on_fault`` replaces the old boolean
+    ``check=``.
+
+    * ``"raise"`` (default, == the old ``check=True``): ``RuntimeError`` if
+      a must-be-zero invariant tripped (``retry_overflow``/``undrained`` —
+      a dropped or undecided edge can break maximality).
+    * ``"report"`` (== the old ``check=False``, plus detection): never
+      raise; the returned :class:`DistStats` carries ``residual_edges`` /
+      ``corrupted_cells`` for inspection. Needs ``edges``. Synchronizes.
+    * ``"recover"``: bounded in-protocol escalation (regrow the retry
+      buffer / drain rounds, at most ``_MAX_ESCALATIONS`` re-runs), then a
+      host-side residual replay that provably completes the matching —
+      the result is always valid+maximal on the uncorrupted graph, though
+      possibly a *different* maximal matching than a fault-free run's.
+      Needs ``edges``.
+
+    ``verify=True`` runs ``core/validate.check_matching`` on the final mask
+    (and fills the DistStats degradation fields); ``faults=`` threads a
+    :class:`FaultPlan` into the compiled bodies for chaos testing —
+    ``None`` (default) compiles to exactly the pre-fault-harness graph.
     """
     mesh, num_devices = _mesh_and_devices(mesh, axis_name)
+    if faults is not None and not faults.active:
+        faults = None  # all sites off: share the clean compiled body
+    drain_eff = 0 if (faults is not None and faults.skip_drain) else None
 
     sharded = (
         reorder != "none"
@@ -591,9 +817,20 @@ def distributed_skipper(
         or device_schedule is not None
     )
     if not sharded:
-        return _dispersed_skipper(
-            edges, mesh, axis_name, num_devices, block_size, vector_rounds,
-            tile_size, drain_rounds, check,
+        if edges is None:
+            raise ValueError("the dispersed schedule needs an edge list")
+
+        def run_dispersed(bs, dr):
+            return _dispersed_skipper(
+                edges, mesh, axis_name, num_devices, bs, vector_rounds,
+                tile_size, dr if drain_eff is None else drain_eff, faults,
+            )
+
+        return _apply_policy(
+            run_dispersed, edges,
+            on_fault=on_fault, verify=verify, faults=faults,
+            block_size=block_size, drain_rounds=drain_rounds,
+            tile_size=tile_size, vector_rounds=vector_rounds,
         )
 
     if device_schedule is None:
@@ -615,13 +852,42 @@ def distributed_skipper(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
+    ds0, bs0 = device_schedule, device_schedule.block_size
+
+    def run_sharded(bs, dr):
+        # escalated retry capacity == escalated global-tier block size:
+        # repartition the SAME WindowSchedule (host-cheap — the window tier
+        # deal is unchanged in content, only the boundary blocks re-deal)
+        ds = ds0 if bs == bs0 else partition_schedule(
+            schedule, num_devices, bs
+        )
+        return _sharded_run(
+            ds, mesh, axis_name, num_devices, vector_rounds,
+            dr if drain_eff is None else drain_eff, backend,
+            bool(interpret), faults,
+        )
+
+    return _apply_policy(
+        run_sharded, edges,
+        on_fault=on_fault, verify=verify, faults=faults,
+        block_size=bs0, drain_rounds=drain_rounds,
+        tile_size=tile_size, vector_rounds=vector_rounds,
+    )
+
+
+def _sharded_run(
+    device_schedule, mesh, axis_name, num_devices, vector_rounds,
+    drain_rounds, backend, interpret, faults,
+):
+    """One locality-sharded execution + host epilogue (no policy)."""
+    schedule = device_schedule.schedule
     slots = schedule.tiles_per_window * schedule.tile_size
     num_rows = schedule.num_rows
     run = _compiled_sharded(
         mesh, axis_name, num_devices, schedule.window,
         schedule.tiles_per_window, schedule.tile_size, num_rows,
         schedule.num_windows, schedule.num_boundary_padded, vector_rounds,
-        drain_rounds, backend, bool(interpret),
+        drain_rounds, backend, interpret, faults,
     )
     flat, matched_w, bmask, stats = run(
         jnp.asarray(device_schedule.u_rows),
@@ -656,16 +922,14 @@ def distributed_skipper(
     if perm is None:
         perm = np.arange(schedule.num_vertices, dtype=np.int32)
     state = flat[jnp.asarray(perm)].astype(STATE_DTYPE)
-    return _finalize(mask, state, stats, check)
+    return _finalize(mask, state, stats)
 
 
 def _dispersed_skipper(
     edges, mesh, axis_name, num_devices, block_size, vector_rounds,
-    tile_size, drain_rounds, check,
+    tile_size, drain_rounds, faults,
 ):
-    """The raw dispersed-block deal (paper §IV-C), D >= 1."""
-    if edges is None:
-        raise ValueError("the dispersed schedule needs an edge list")
+    """One raw dispersed-block execution (paper §IV-C), D >= 1 (no policy)."""
     n = edges.num_vertices
     m = edges.num_edges
     e = edges.canonical()
@@ -680,7 +944,7 @@ def _dispersed_skipper(
 
     run = _compiled_dispersed(
         mesh, axis_name, num_devices, n, num_edges_padded, vector_rounds,
-        tile_size, drain_rounds,
+        tile_size, drain_rounds, faults,
     )
     state, mask_padded, stats = run(ub, vb, ib)
 
@@ -688,4 +952,4 @@ def _dispersed_skipper(
     # stream position of original edge k is k (dispersed_blocks keeps stream
     # order: block index = k // B, position = k % B)
     mask = mask_padded[:m]
-    return _finalize(mask, state, stats, check)
+    return _finalize(mask, state, stats)

@@ -722,6 +722,45 @@ def tile_pass(
     return state, matched, conflicts, taken
 
 
+def stream_pass(
+    state: jax.Array,
+    u: jax.Array,
+    v: jax.Array,
+    *,
+    n: int,
+    vector_rounds: int,
+    tile_size: int,
+    conflict_method: str = "auto",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Greedy first-claim pass over an [L]-sized edge slab in stream order,
+    tiled by ``tile_size`` (``L % tile_size == 0``; -1 marks padding):
+    a ``lax.scan`` of :func:`tile_pass` with the state as carry, i.e. the
+    sequential single pass over the slab's edges at tile granularity.
+
+    The one slab driver shared by the distributed matcher's LOCAL PASS /
+    REPLAY steps (``core/distributed.py``) and the fault-recovery residual
+    replay (``core/faults.py``) — the recovery path cannot drift from the
+    protocol it recovers.
+
+    Returns ``(state, matched bool[L], conflicts int32[L])``.
+    """
+    l = u.shape[0]
+    num_tiles = l // tile_size
+    ut = u.reshape(num_tiles, tile_size)
+    vt = v.reshape(num_tiles, tile_size)
+
+    def step(st, uv):
+        uu, vv = uv
+        st, matched, conflicts, _ = tile_pass(
+            st, uu, vv, n=n, vector_rounds=vector_rounds,
+            conflict_method=conflict_method,
+        )
+        return st, (matched, conflicts)
+
+    state, (matched, conflicts) = jax.lax.scan(step, state, (ut, vt))
+    return state, matched.reshape(-1), conflicts.reshape(-1)
+
+
 def tile_pass_pair(
     state_rows: jax.Array,
     u_loc: jax.Array,

@@ -1,0 +1,232 @@
+"""Fault injection + graceful-degradation recovery (DESIGN.md §11).
+
+Skipper's central guarantee — every edge is processed once and *definitively*
+decided — is exactly what a distributed port can silently lose: a full retry
+buffer or an undrained cross-window queue drops edges, a lost shard drops a
+whole window's decisions, a corrupted state byte turns live vertices into
+zombies no edge can match. This module provides both halves of the failure
+story:
+
+**Injection** (:class:`FaultPlan`): a seeded, deterministic description of
+which failure sites fire and at what rate. The plan is a frozen (hashable)
+dataclass so it rides the compiled-function caches as a static argument;
+every injection is gated at trace time (``plan is None`` — the default —
+adds literally zero ops to the compiled graph, test- and bench-pinned).
+Sites, and where each one is wired in:
+
+* ``drop_proposals`` — Bernoulli-drop proposal slots *before* the gather
+  (``distributed._make_round_fn``); the local device believes it proposed,
+  so the edge is never requeued: the silent-loss failure mode. In the
+  single-device pipeline the same mask invalidates global-tier slots before
+  the epilogue (``kernels/skipper_match/ops``) — same victims at D=1.
+* ``truncate_retry`` — force the retry-buffer capacity down to ``k`` slots
+  so requeues overflow (``retry_overflow`` trips).
+* ``corrupt_state`` — Bernoulli-set committed-state bytes to the
+  out-of-domain :data:`CORRUPT` value. Out-of-domain corruption can only
+  *kill* edges (a corrupted cell is neither ACC nor MCHD, so no edge on it
+  is ever free), i.e. it breaks maximality but never validity — which is
+  what makes mask-anchored recovery (below) sound.
+* ``lose_shard`` — zero one device's window-tier contribution (state rows
+  AND matched bits together, so the loss is internally consistent) and
+  swallow its global-tier proposals; in the single-device pipeline the
+  analogue loses one window row.
+* ``skip_drain`` — force the drain rounds to zero so live retry entries
+  survive the run (``undrained`` trips).
+
+**Recovery** (:func:`residual_replay`): the provably-completing final rung
+of ``on_fault="recover"``'s ladder. The returned ``match_mask`` is the
+ground truth (every fault above preserves its validity); the committed
+state is NOT trusted (it may be corrupted or partially lost). So: rebuild
+the vertex state purely from the mask, collect the *residual* edges —
+valid, unmatched, neither endpoint covered — and run the standard
+first-claim tile rounds (``engine.stream_pass``, the exact same engine
+every matcher uses) over them in stream order. After the pass no valid
+edge is free, hence the result is maximal; commits are endpoint-disjoint
+by the engine invariant, hence it stays valid. Out-of-domain bytes are
+detected on the returned state (``corrupted_cells``) and simply vanish in
+the rebuild — their vertices' edges are re-decided in the same pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import ACC, MCHD, stream_pass
+from repro.core.types import STATE_DTYPE
+from repro.graphs.types import EdgeList
+
+__all__ = [
+    "CORRUPT",
+    "FaultPlan",
+    "RecoveryReport",
+    "corruption_mask",
+    "proposal_drop_mask",
+    "detect_residual",
+    "residual_replay",
+]
+
+# Out-of-domain state byte injected by ``corrupt_state`` — anything outside
+# {ACC=0, RSVD=1, MCHD=2} works; 7 is visibly wrong in dumps.
+CORRUPT = 7
+
+# Site keys folded into the plan's PRNG key so every site draws an
+# independent, reproducible stream (shared by the traced injection code and
+# the host-side test oracles re-deriving the victim sets).
+_SITE_DROP = 1
+_SITE_CORRUPT = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded, deterministic fault-injection plan (all sites default off).
+
+    Hashable and fully static: it participates in the compiled-function
+    cache keys, and two runs with the same plan + schedule inject the exact
+    same faults (the chaos tests and the host-side victim oracles rely on
+    this).
+    """
+
+    seed: int = 0
+    drop_proposals: float = 0.0          # P(drop) per global-tier stream slot
+    truncate_retry: Optional[int] = None  # retry cap forced to min(cap, k)
+    corrupt_state: float = 0.0           # P(corrupt) per committed-state cell
+    lose_shard: Optional[int] = None     # device (mod D) whose window tier is lost
+    skip_drain: bool = False             # drain rounds forced to 0
+
+    @property
+    def active(self) -> bool:
+        return (
+            self.drop_proposals > 0.0
+            or self.truncate_retry is not None
+            or self.corrupt_state > 0.0
+            or self.lose_shard is not None
+            or self.skip_drain
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryReport:
+    """What the degradation machinery saw and did (all zero on a clean run).
+
+    ``recovery_attempts`` counts ladder steps that actually did something:
+    in-protocol escalation re-runs plus the residual replay if it recovered
+    anything. ``residual_edges`` is the number of valid edges left undecided
+    (unmatched with both endpoints uncovered) before the replay;
+    ``recovered_matches`` how many matches the replay added;
+    ``corrupted_cells`` how many out-of-domain state bytes were detected on
+    the returned state (they are cleaned by the replay's rebuilt state).
+    """
+
+    recovery_attempts: int = 0
+    residual_edges: int = 0
+    recovered_matches: int = 0
+    corrupted_cells: int = 0
+
+
+def proposal_drop_mask(plan: FaultPlan, num_slots: int) -> jax.Array:
+    """bool[num_slots] — True where the plan drops a global-tier stream slot.
+
+    Keyed only by ``(plan.seed, num_slots)``, so the distributed gather-drop
+    and the single-device epilogue-drop pick the SAME victims for the same
+    schedule, and tests re-derive the victim set host-side."""
+    key = jax.random.fold_in(jax.random.PRNGKey(plan.seed), _SITE_DROP)
+    return jax.random.bernoulli(key, plan.drop_proposals, (num_slots,))
+
+
+def corruption_mask(plan: FaultPlan, num_cells: int) -> jax.Array:
+    """bool[num_cells] — True where the plan corrupts a committed-state cell
+    (cells are in the state's own id space: renumbered-flat for the windowed
+    pipelines, original vertex ids for the dispersed path)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(plan.seed), _SITE_CORRUPT)
+    return jax.random.bernoulli(key, plan.corrupt_state, (num_cells,))
+
+
+def _rebuild_and_residual(e: EdgeList, match_mask, state):
+    """Shared detection core: mask-rebuilt state, residual-edge mask, and
+    the out-of-domain cell count of the (untrusted) returned ``state``."""
+    n = e.num_vertices
+    valid = (e.u != e.v) & (e.u >= 0) & (e.v < n)
+    sel = match_mask & valid
+    rebuilt = jnp.full((n + 1,), ACC, STATE_DTYPE)
+    rebuilt = rebuilt.at[jnp.where(sel, e.u, n)].set(MCHD, mode="drop")
+    rebuilt = rebuilt.at[jnp.where(sel, e.v, n)].set(MCHD, mode="drop")
+    # index n = guard slot (ACC) so invalid edges never read a real vertex
+    su = rebuilt[jnp.where(valid, e.u, n)]
+    sv = rebuilt[jnp.where(valid, e.v, n)]
+    residual = valid & (~match_mask) & (su != MCHD) & (sv != MCHD)
+    corrupted = jnp.sum(
+        (state != ACC) & (state != MCHD), dtype=jnp.int32
+    )
+    return rebuilt[:n], residual, corrupted
+
+
+@jax.jit
+def _detect(e: EdgeList, match_mask, state):
+    _, residual, corrupted = _rebuild_and_residual(e, match_mask, state)
+    return jnp.sum(residual, dtype=jnp.int32), corrupted
+
+
+def detect_residual(
+    edges: EdgeList, match_mask: jax.Array, state: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """(residual_edges, corrupted_cells) of a finished run — the detection
+    half of the ladder, used by ``on_fault="report"`` and ``verify=``.
+    Zero/zero iff the run upheld the definitive-decision invariant."""
+    return _detect(edges.canonical(), match_mask, state)
+
+
+@partial(jax.jit, static_argnames=("tile_size", "vector_rounds"))
+def _replay(e: EdgeList, match_mask, state, tile_size: int, vector_rounds: int):
+    n = e.num_vertices
+    m = e.num_edges
+    rebuilt, residual, corrupted = _rebuild_and_residual(e, match_mask, state)
+    # feed ONLY the residual edges to the engine (others masked invalid),
+    # padded to a tile multiple, in stream order — the replay is literally
+    # one more single pass over the (residual) edges.
+    pad = (-m) % tile_size
+    ru = jnp.concatenate(
+        [jnp.where(residual, e.u, -1), jnp.full((pad,), -1, jnp.int32)]
+    )
+    rv = jnp.concatenate(
+        [jnp.where(residual, e.v, -1), jnp.full((pad,), -1, jnp.int32)]
+    )
+    final_state, matched, _ = stream_pass(
+        rebuilt, ru, rv, n=n, vector_rounds=vector_rounds, tile_size=tile_size
+    )
+    mask_out = match_mask | (matched[:m] > 0)
+    return (
+        mask_out,
+        final_state,
+        jnp.sum(residual, dtype=jnp.int32),
+        jnp.sum(matched[:m], dtype=jnp.int32).astype(jnp.int32),
+        corrupted,
+    )
+
+
+def residual_replay(
+    edges: EdgeList,
+    match_mask: jax.Array,
+    state: jax.Array,
+    *,
+    tile_size: int = 256,
+    vector_rounds: int = 1,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """The recovery ladder's final rung: complete a (possibly degraded)
+    matching into a valid+maximal one on the uncorrupted graph.
+
+    Anchors on ``match_mask`` (kept verbatim — every modeled fault preserves
+    its validity), rebuilds the vertex state from it, and runs the engine's
+    first-claim rounds over the residual edges in stream order. Returns
+    ``(match_mask, state, residual_edges, recovered_matches,
+    corrupted_cells)`` where the returned state is the *clean* rebuilt one
+    (corruption does not survive). ``residual_edges == 0`` and
+    ``corrupted_cells == 0`` means the input was already maximal and clean,
+    and the mask comes back unchanged.
+    """
+    return _replay(
+        edges.canonical(), match_mask, state, tile_size, vector_rounds
+    )

@@ -60,13 +60,6 @@ from repro.graphs.partition import pad_edges
 __all__ = ["skipper", "tile_pass"]
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "tile_size", "vector_rounds", "with_conflicts", "dispersed",
-        "conflict_method",
-    ),
-)
 def skipper(
     edges: EdgeList,
     tile_size: int = 512,
@@ -74,6 +67,7 @@ def skipper(
     with_conflicts: bool = False,
     dispersed: bool = True,
     conflict_method: str = "auto",
+    verify: bool = False,
 ) -> Tuple[MatchResult, Optional[jax.Array]]:
     """Single-pass tiled Skipper. Returns (MatchResult, conflicts_per_edge?).
 
@@ -81,7 +75,46 @@ def skipper(
     Table II instrumentation (number of rounds each edge spent blocked).
     ``conflict_method`` is forwarded to ``engine.tile_pass``'s blocked
     predicate selection (never changes output; see DESIGN.md §3).
+
+    ``verify=True`` runs ``core/validate.check_matching`` on the result and
+    raises ``RuntimeError`` if it is not a valid maximal matching — a
+    host-side self-check (it synchronizes), kept outside the jitted body.
     """
+    result, conflicts = _skipper(
+        edges, tile_size, vector_rounds, with_conflicts, dispersed,
+        conflict_method,
+    )
+    if verify:
+        from repro.core.validate import check_matching
+
+        chk = check_matching(edges, result.match_mask)
+        ok_v, ok_m = (bool(x) for x in jax.device_get(
+            (chk["valid"], chk["maximal"])
+        ))
+        if not (ok_v and ok_m):
+            raise RuntimeError(
+                f"skipper verify=True: matching failed validation "
+                f"(valid={ok_v}, maximal={ok_m})"
+            )
+    return result, conflicts
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "tile_size", "vector_rounds", "with_conflicts", "dispersed",
+        "conflict_method",
+    ),
+)
+def _skipper(
+    edges: EdgeList,
+    tile_size: int = 512,
+    vector_rounds: int = 1,
+    with_conflicts: bool = False,
+    dispersed: bool = True,
+    conflict_method: str = "auto",
+) -> Tuple[MatchResult, Optional[jax.Array]]:
+    """The jitted body of :func:`skipper` (verification stays host-side)."""
     n = edges.num_vertices
     m = edges.num_edges
     e = pad_edges(edges.canonical(), tile_size)

@@ -3,6 +3,11 @@
   (a) validity  — no two selected edges share an endpoint;
   (b) maximality — every (non-self, non-duplicate-dead) edge shares an
       endpoint with a selected edge.
+
+Consumed directly by tests and — since the failure-model PR — by the
+matchers themselves behind ``verify=`` (``skipper_match`` /
+``distributed_skipper`` / ``skipper``), so the degenerate and
+out-of-range cases below are load-bearing, not defensive.
 """
 from __future__ import annotations
 
@@ -18,25 +23,43 @@ from repro.graphs.types import EdgeList
 def check_matching(edges: EdgeList, match_mask: jax.Array) -> Dict[str, jax.Array]:
     e = edges.canonical()
     n = e.num_vertices
-    valid = (e.u != e.v) & (e.u >= 0)
+    if e.num_edges == 0 or n == 0:
+        # Degenerate inputs: nothing to select and nothing left uncovered —
+        # vacuously a valid maximal matching. Returned explicitly because
+        # zero-size scatters / jnp.all over empty axes are exactly the edge
+        # cases jit'd reductions get wrong subtly (shape [0] all() is True,
+        # but the [n+1] scatter below would still build inc of shape [1]
+        # from n==0 and gather it for every dead edge).
+        false_count = jnp.zeros((), jnp.int32)
+        return {
+            "valid": jnp.asarray(True),
+            "maximal": jnp.asarray(True),
+            "num_matches": false_count,
+            "num_covered_vertices": false_count,
+        }
+    # out-of-range guard: canonical() gives u <= v, so v < n bounds both
+    # endpoints — rows pointing past num_vertices are dead, never aliased
+    # onto a real vertex.
+    valid = (e.u != e.v) & (e.u >= 0) & (e.v < n)
     mask = match_mask & valid
 
     inc = jnp.zeros((n + 1,), jnp.int32)
     inc = inc.at[jnp.where(mask, e.u, n)].add(1, mode="drop")
     inc = inc.at[jnp.where(mask, e.v, n)].add(1, mode="drop")
-    inc = inc[:n]
-    is_valid = jnp.all(inc <= 1)
+    is_valid = jnp.all(inc[:n] <= 1)
 
-    covered = inc > 0
-    cov_u = covered[jnp.where(valid, e.u, 0)]
-    cov_v = covered[jnp.where(valid, e.v, 0)]
+    # slot n is always uncovered: dead edges gather it instead of aliasing
+    # vertex 0 (whose coverage would vacuously "satisfy" them)
+    covered = jnp.concatenate([inc[:n] > 0, jnp.zeros((1,), jnp.bool_)])
+    cov_u = covered[jnp.where(valid, e.u, n)]
+    cov_v = covered[jnp.where(valid, e.v, n)]
     is_maximal = jnp.all(~valid | cov_u | cov_v)
 
     return {
         "valid": is_valid,
         "maximal": is_maximal,
         "num_matches": jnp.sum(mask),
-        "num_covered_vertices": jnp.sum(covered),
+        "num_covered_vertices": jnp.sum(covered[:n]),
     }
 
 

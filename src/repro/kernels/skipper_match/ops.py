@@ -32,7 +32,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
+from repro.core.faults import (
+    CORRUPT,
+    FaultPlan,
+    RecoveryReport,
+    corruption_mask,
+    detect_residual,
+    proposal_drop_mask,
+    residual_replay,
+)
 from repro.core.types import STATE_DTYPE, Counters, MatchResult
+from repro.core.validate import check_matching
 from repro.graphs.types import EdgeList
 from repro.graphs.windows import WindowSchedule, build_window_schedule
 from repro.kernels.skipper_match.kernel import (
@@ -96,6 +106,7 @@ def _build_pipeline(
     interpret: bool,
     backend: str,
     conflict_method: str,
+    faults: Optional[FaultPlan] = None,
 ):
     """One jitted compilation unit per static schedule shape: windowed kernel
     sweep over the dense rows + boundary epilogue + on-device counters.
@@ -104,6 +115,12 @@ def _build_pipeline(
     ``perm`` maps original vertex ids to renumbered ids (identity when the
     schedule was built without reordering) — the returned state is gathered
     through it so callers always see original ids.
+
+    ``faults`` (frozen, part of the lru key; default None == zero extra ops)
+    injects the single-device analogues of the distributed failure sites at
+    the SAME stream positions / state cells (DESIGN.md §11): drop global-tier
+    slots before the epilogue, lose one window row's tier contribution,
+    corrupt assembled-state bytes.
     """
     n_flat = num_windows * window
     nb_tiles = num_boundary_padded // tile_size
@@ -124,6 +141,21 @@ def _build_pipeline(
             backend=backend,
             interpret=interpret,
         )
+        if faults is not None and faults.lose_shard is not None and num_rows:
+            # FAULT: lost-shard analogue — one window row's tier
+            # contribution (state AND matched bits) vanishes
+            lost_row = faults.lose_shard % num_rows
+            rowsel = (
+                jax.lax.broadcasted_iota(jnp.int32, state2.shape, 0)
+                == lost_row
+            )
+            state2 = jnp.where(rowsel, jnp.zeros_like(state2), state2)
+            matched2 = jnp.where(
+                jax.lax.broadcasted_iota(jnp.int32, matched2.shape, 0)
+                == lost_row,
+                jnp.zeros_like(matched2),
+                matched2,
+            )
 
         # Rows hold only the dense windows: scatter them into the full
         # [num_windows, window] state (coalesced windows stay all-ACC — their
@@ -135,6 +167,23 @@ def _build_pipeline(
             jnp.zeros((num_windows, window), state_dt)
             .at[row_ids].set(state2.astype(state_dt))
         )
+        if faults is not None and faults.corrupt_state > 0.0:
+            # FAULT: out-of-domain bytes in the assembled committed state —
+            # same cells (renumbered-flat id space) as the distributed
+            # locality-sharded injection
+            flat = jnp.where(
+                corruption_mask(faults, n_flat).reshape(num_windows, window),
+                jnp.asarray(CORRUPT, state_dt),
+                flat,
+            )
+        if faults is not None and faults.drop_proposals > 0.0 and nb_tiles:
+            # FAULT: dropped global-tier slots — mark them invalid before
+            # the epilogue so the edge is silently never decided (same
+            # victims as the distributed gather-drop: the mask is keyed by
+            # boundary stream position)
+            dmask = proposal_drop_mask(faults, num_boundary_padded)
+            bu = jnp.where(dmask, -1, bu)
+            bv = jnp.where(dmask, -1, bv)
 
         # Global-tier epilogue: the block-pair grouped cross-window +
         # coalesced edges, same first-claim tile pass, still inside this
@@ -210,7 +259,10 @@ def skipper_match(
     reorder: str = "none",
     with_conflicts: bool = False,
     conflict_method: str = "auto",
-) -> Union[MatchResult, Tuple[MatchResult, jax.Array]]:
+    faults: Optional[FaultPlan] = None,
+    on_fault: str = "raise",
+    verify: bool = False,
+) -> Union[MatchResult, Tuple]:
     """Full-graph device-resident matcher: one traced pipeline for all
     windows plus the in-device boundary epilogue.
 
@@ -223,9 +275,40 @@ def skipper_match(
     ``conflict_method`` reaches the XLA twin's boundary-epilogue
     ``engine.tile_pass`` (the Pallas kernels force the share-matrix form —
     Mosaic has no sort/scatter); the choice never changes output.
+
+    Failure handling (DESIGN.md §11): ``faults=`` threads a frozen
+    :class:`FaultPlan` into the compiled pipeline (``None``, the default,
+    compiles the exact pre-harness graph). ``on_fault`` decides what to do
+    about damage — the single-device pipeline has no runtime tripwire
+    (nothing overflows), so ``"raise"`` only has teeth with ``verify=True``:
+
+    * ``"raise"`` (default): return the result as-is; with ``verify=True``
+      raise ``RuntimeError`` if the matching fails ``check_matching`` or
+      residual/corrupted damage is detected.
+    * ``"report"``: append a :class:`RecoveryReport` (detection only) to
+      the return tuple. Needs ``edges``.
+    * ``"recover"``: run the residual replay (``faults.residual_replay`` —
+      rebuild state from the mask, complete the matching over undecided
+      edges); the result is provably valid+maximal on the uncorrupted
+      graph. Appends the :class:`RecoveryReport`. Needs ``edges``.
+      ``Counters`` still describe the faulted run, not the replay.
+
+    Return value order: ``result`` [, ``conflicts`` if ``with_conflicts``]
+    [, ``report`` if ``on_fault != "raise"``].
     """
     if backend not in ("pallas", "xla"):
         raise ValueError(f"unknown backend {backend!r}")
+    if on_fault not in ("raise", "recover", "report"):
+        raise ValueError(
+            f"on_fault must be 'raise', 'recover' or 'report', got {on_fault!r}"
+        )
+    if (verify or on_fault in ("recover", "report")) and edges is None:
+        raise ValueError(
+            "on_fault='recover'/'report' and verify=True need the original "
+            "edge list — pass edges even when a prebuilt schedule is given"
+        )
+    if faults is not None and not faults.active:
+        faults = None  # all sites off: share the clean compiled pipeline
     if schedule is None:
         if edges is None:
             raise ValueError("need either edges or a prebuilt schedule")
@@ -247,6 +330,7 @@ def skipper_match(
         bool(interpret),
         backend,
         conflict_method,
+        faults,
     )
     perm = schedule.perm
     if perm is None:
@@ -263,6 +347,55 @@ def skipper_match(
         jnp.asarray(perm),
     )
     result = MatchResult(match_mask=mask, state=state, counters=counters)
+
+    report = None
+    if on_fault == "recover":
+        rmask, rstate, residual, recovered, corrupted = residual_replay(
+            edges, result.match_mask, result.state,
+            tile_size=schedule.tile_size, vector_rounds=vector_rounds,
+        )
+        res_i, cor_i = (int(x) for x in jax.device_get((residual, corrupted)))
+        result = MatchResult(match_mask=rmask, state=rstate, counters=counters)
+        report = RecoveryReport(
+            recovery_attempts=1 if (res_i or cor_i) else 0,
+            residual_edges=res_i,
+            recovered_matches=int(jax.device_get(recovered)),
+            corrupted_cells=cor_i,
+        )
+    elif on_fault == "report" or verify:
+        residual, corrupted = detect_residual(
+            edges, result.match_mask, result.state
+        )
+        res_i, cor_i = (int(x) for x in jax.device_get((residual, corrupted)))
+        report = RecoveryReport(
+            residual_edges=res_i, corrupted_cells=cor_i
+        )
+    if verify:
+        chk = check_matching(edges, result.match_mask)
+        ok_v, ok_m = (bool(x) for x in jax.device_get(
+            (chk["valid"], chk["maximal"])
+        ))
+        if on_fault == "recover" and not (ok_v and ok_m):
+            raise RuntimeError(
+                "verify=True after on_fault='recover': recovered matching "
+                f"failed validation (valid={ok_v}, maximal={ok_m}) — this "
+                "is a bug in the recovery ladder, please report it"
+            )
+        if on_fault == "raise" and not (
+            ok_v and ok_m
+            and report.residual_edges == 0 and report.corrupted_cells == 0
+        ):
+            raise RuntimeError(
+                "verify=True: matching failed validation "
+                f"(valid={ok_v}, maximal={ok_m}, "
+                f"residual_edges={report.residual_edges}, "
+                f"corrupted_cells={report.corrupted_cells}) — run "
+                "on_fault='recover' to complete it or 'report' to inspect"
+            )
+
+    out = (result,)
     if with_conflicts:
-        return result, conflicts
-    return result
+        out = out + (conflicts,)
+    if on_fault != "raise":
+        out = out + (report,)
+    return out if len(out) > 1 else result

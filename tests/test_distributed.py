@@ -166,21 +166,21 @@ eu = np.array([e[0] for blk in blocks for e in blk], np.int32)
 ev = np.array([e[1] for blk in blocks for e in blk], np.int32)
 g = EdgeList(jnp.asarray(eu), jnp.asarray(ev), 60)
 
-# default check=True raises on the violated invariant
+# default on_fault="raise" raises on the violated invariant
 try:
     distributed_skipper(g, block_size=8, tile_size=8)
     raise SystemExit("expected RuntimeError on retry overflow")
 except RuntimeError as e:
     assert "retry_overflow" in str(e), e
 
-# check=False surfaces the numbers instead
-r, st = distributed_skipper(g, block_size=8, tile_size=8, check=False)
+# on_fault="report" surfaces the numbers instead
+r, st = distributed_skipper(g, block_size=8, tile_size=8, on_fault="report")
 assert int(st.retry_overflow) == 5, int(st.retry_overflow)
 assert not st.ok
 
 # tiny drain_rounds additionally leaves the buffer undrained
 r, st = distributed_skipper(
-    g, block_size=8, tile_size=8, drain_rounds=0, check=False
+    g, block_size=8, tile_size=8, drain_rounds=0, on_fault="report"
 )
 assert int(st.retry_overflow) == 5
 assert int(st.undrained) == 8, int(st.undrained)
@@ -189,6 +189,15 @@ assert not st.ok
 # a big-enough buffer clears both invariants on the same graph
 r, st = distributed_skipper(g, block_size=32, tile_size=8)
 assert st.ok
+
+# on_fault="recover": the in-protocol escalation regrows the retry buffer
+# (8 -> 16 -> 32) until the same graph clears, no replay rung needed
+r, st = distributed_skipper(
+    g, block_size=8, tile_size=8, on_fault="recover", verify=True
+)
+assert int(st.retry_overflow) == 0 and int(st.undrained) == 0
+assert int(st.recovery_attempts) >= 1, int(st.recovery_attempts)
+assert int(st.residual_edges) == 0, int(st.residual_edges)
 print("SUBPROCESS_OK")
 """
 

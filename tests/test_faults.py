@@ -1,0 +1,372 @@
+"""Chaos matrix for the fault-injection harness + recovery ladder
+(DESIGN.md §11).
+
+Every injection site of ``core/faults.FaultPlan`` is driven through every
+matcher entry point — ``skipper_match`` (single-device pipeline, XLA twin),
+``distributed_skipper`` dispersed and locality-sharded at D=1 in-process,
+and both distributed schedules at forced D=4 in a subprocess — and the
+recovery ladder (``on_fault="recover"``) must always hand back a matching
+that passes ``core/validate.check_matching`` (valid + maximal on the
+uncorrupted graph).
+
+Beyond "recovery always completes", this file pins:
+
+* faults actually bite — ``on_fault="report"`` sees nonzero damage for the
+  sites that are live at D=1 (drop / corrupt / lose_shard; truncate and
+  skip_drain only have teeth when requeues exist, i.e. D > 1);
+* fault-free runs report exactly zero on every recovery field (the harness
+  compiles to the pre-harness graph when ``faults`` is inactive);
+* blast-radius containment: the recovered matching agrees with the
+  fault-free run outside the taint closure of the injected damage (the
+  victim sets are re-derivable host-side because the fault masks are keyed
+  only on ``(plan.seed, size)``);
+* ``check_matching`` degenerate inputs (satellite: empty edge list, n == 0,
+  out-of-range dead edges must not alias vertex 0).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp import given, settings, st  # noqa: E402
+
+from repro.core import FaultPlan, check_matching
+from repro.core.distributed import distributed_skipper
+from repro.core.faults import corruption_mask, proposal_drop_mask
+from repro.core.types import MCHD
+from repro.graphs import (
+    EdgeList,
+    build_window_schedule,
+    erdos_renyi_graph,
+)
+from repro.kernels.skipper_match import skipper_match
+
+from test_distributed import _run_subprocess  # noqa: E402
+
+
+# One plan per injection site, all at the pinned chaos seed. lose_shard=0
+# hits row/device 0 which always exists at any D / schedule size.
+PLANS = {
+    "drop": FaultPlan(seed=7, drop_proposals=0.3),
+    "truncate": FaultPlan(seed=7, truncate_retry=0),
+    "corrupt": FaultPlan(seed=7, corrupt_state=0.05),
+    "lose_shard": FaultPlan(seed=7, lose_shard=0),
+    "skip_drain": FaultPlan(seed=7, skip_drain=True),
+}
+
+G = erdos_renyi_graph(300, 900, seed=0)
+SCHED = build_window_schedule(G, window=128, tile_size=64)
+
+
+def _assert_valid_maximal(g, mask, label):
+    chk = check_matching(g, mask)
+    ok_v, ok_m = (bool(x) for x in jax.device_get((chk["valid"], chk["maximal"])))
+    assert ok_v and ok_m, f"{label}: valid={ok_v} maximal={ok_m}"
+
+
+# ---------------------------------------------------------------------------
+# in-process chaos matrix (D=1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("site", sorted(PLANS))
+def test_chaos_skipper_match_recovers(site):
+    plan = PLANS[site]
+    # verify=True makes the recover path self-check: a RuntimeError here is
+    # by construction a recovery-ladder bug, not a fault symptom.
+    result, report = skipper_match(
+        edges=G, schedule=SCHED, backend="xla",
+        faults=plan, on_fault="recover", verify=True,
+    )
+    _assert_valid_maximal(G, result.match_mask, f"skipper_match/{site}")
+    assert report.residual_edges >= 0
+    if report.residual_edges or report.corrupted_cells:
+        assert report.recovery_attempts >= 1
+
+
+@pytest.mark.parametrize("site", sorted(PLANS))
+@pytest.mark.parametrize("kind", ["dispersed", "sharded"])
+def test_chaos_distributed_d1_recovers(site, kind):
+    plan = PLANS[site]
+    kw = (
+        dict(block_size=64, tile_size=64)
+        if kind == "dispersed"
+        else dict(block_size=64, window=128, tile_size=64)
+    )
+    result, stats = distributed_skipper(
+        G, faults=plan, on_fault="recover", verify=True, **kw
+    )
+    _assert_valid_maximal(G, result.match_mask, f"dist1/{kind}/{site}")
+    # the ladder is bounded: at most _MAX_ESCALATIONS re-runs + one replay
+    assert int(stats.recovery_attempts) <= 3
+
+
+def test_faults_actually_bite_report_mode():
+    """report mode must SEE the damage (else recover tests prove nothing).
+
+    Sites live at D=1: drop (proposals swallowed before the gather),
+    corrupt (out-of-domain state bytes), lose_shard (a window row / device
+    contribution zeroed). truncate/skip_drain only bite when requeues
+    exist, i.e. D > 1 — pinned inert here so the matrix documents it.
+    """
+    for site in ("drop", "corrupt", "lose_shard"):
+        _, report = skipper_match(
+            edges=G, schedule=SCHED, backend="xla",
+            faults=PLANS[site], on_fault="report",
+        )
+        damage = report.residual_edges + report.corrupted_cells
+        assert damage > 0, f"skipper_match/{site}: fault did not bite"
+
+        _, stats = distributed_skipper(
+            G, block_size=64, tile_size=64,
+            faults=PLANS[site], on_fault="report",
+        )
+        damage = int(stats.residual_edges) + int(stats.corrupted_cells)
+        assert damage > 0, f"dispersed/{site}: fault did not bite"
+
+    for site in ("truncate", "skip_drain"):  # inert at D=1: no requeues
+        _, report = skipper_match(
+            edges=G, schedule=SCHED, backend="xla",
+            faults=PLANS[site], on_fault="report",
+        )
+        assert report.residual_edges == 0 and report.corrupted_cells == 0
+
+
+def test_corruption_breaks_only_maximality():
+    """Out-of-domain bytes can hide vertices (maximality) but can never
+    fabricate a matched edge (validity) — the mask, not the state array, is
+    ground truth. This is what makes mask-anchored recovery sound."""
+    result, _ = skipper_match(
+        edges=G, schedule=SCHED, backend="xla",
+        faults=PLANS["corrupt"], on_fault="report",
+    )
+    chk = check_matching(G, result.match_mask)
+    assert bool(jax.device_get(chk["valid"]))
+
+
+def test_fault_free_recovery_fields_are_zero():
+    result, report = skipper_match(
+        edges=G, schedule=SCHED, backend="xla",
+        on_fault="report", verify=True,
+    )
+    assert report.recovery_attempts == 0
+    assert report.residual_edges == 0
+    assert report.recovered_matches == 0
+    assert report.corrupted_cells == 0
+
+    for kw in (
+        dict(block_size=64, tile_size=64),
+        dict(block_size=64, window=128, tile_size=64),
+    ):
+        _, stats = distributed_skipper(G, on_fault="report", verify=True, **kw)
+        assert int(stats.recovery_attempts) == 0
+        assert int(stats.residual_edges) == 0
+        assert int(stats.recovered_matches) == 0
+        assert int(stats.corrupted_cells) == 0
+
+
+def test_inactive_plan_is_the_clean_path():
+    """An all-off FaultPlan must produce bit-identical output to faults=None
+    (it is normalized away before the compile cache)."""
+    base = skipper_match(edges=G, schedule=SCHED, backend="xla")
+    same = skipper_match(edges=G, schedule=SCHED, backend="xla",
+                         faults=FaultPlan(seed=99))
+    assert not FaultPlan(seed=99).active
+    assert np.array_equal(np.asarray(base.match_mask),
+                          np.asarray(same.match_mask))
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="on_fault"):
+        skipper_match(edges=G, schedule=SCHED, backend="xla",
+                      on_fault="retry")
+    with pytest.raises(ValueError, match="edge list"):
+        skipper_match(schedule=SCHED, backend="xla", on_fault="recover")
+    with pytest.raises(ValueError, match="on_fault"):
+        distributed_skipper(G, block_size=64, on_fault="panic")
+    with pytest.raises(ValueError, match="edge"):
+        distributed_skipper(None, schedule=SCHED, block_size=64,
+                            on_fault="recover")
+
+
+# ---------------------------------------------------------------------------
+# blast-radius containment: recovered run agrees with the fault-free run
+# outside the taint closure of the injected damage
+# ---------------------------------------------------------------------------
+
+def _seed_taint(plan: FaultPlan) -> np.ndarray:
+    """Host-side re-derivation of the direct victim VERTICES of ``plan``
+    on ``SCHED`` — possible because the fault masks are keyed only on
+    (seed, size). truncate/skip_drain victims are runtime-dependent (which
+    edges requeue) so this oracle only covers drop/corrupt/lose_shard."""
+    n = G.num_vertices
+    tainted = np.zeros(n, bool)
+    gu = np.asarray(G.u)
+    gv = np.asarray(G.v)
+
+    if plan.drop_proposals > 0.0:
+        nb = SCHED.num_boundary_padded
+        dm = np.asarray(proposal_drop_mask(plan, nb))
+        ws = SCHED.num_rows * SCHED.tiles_per_window * SCHED.tile_size
+        src = np.asarray(SCHED.stream_src)
+        hit = (src >= ws) & (src < ws + nb)
+        hit &= dm[np.clip(src - ws, 0, nb - 1)]
+        tainted[gu[hit]] = True
+        tainted[gv[hit]] = True
+
+    if plan.corrupt_state > 0.0:
+        cm = np.asarray(corruption_mask(plan, SCHED.num_windows * SCHED.window))
+        flat = np.nonzero(cm)[0]
+        # reorder="none" -> flat renumbered id == original id for ids < n
+        tainted[flat[flat < n]] = True
+
+    if plan.lose_shard is not None:
+        row = plan.lose_shard % SCHED.num_rows
+        w = int(SCHED.window_ids[row])
+        lo, hi = w * SCHED.window, min((w + 1) * SCHED.window, n)
+        tainted[lo:hi] = True
+
+    return tainted
+
+
+@pytest.mark.parametrize("site", ["drop", "corrupt", "lose_shard"])
+def test_recovery_blast_radius_contained(site):
+    """Every edge decided differently by the recovered run must be reachable
+    from a direct fault victim through a chain of differing edges: damage
+    propagates only along alternating paths, never teleports."""
+    plan = PLANS[site]
+    base = skipper_match(edges=G, schedule=SCHED, backend="xla")
+    rec, _ = skipper_match(
+        edges=G, schedule=SCHED, backend="xla",
+        faults=plan, on_fault="recover",
+    )
+    diff = np.asarray(base.match_mask) != np.asarray(rec.match_mask)
+    du = np.asarray(G.u)[diff]
+    dv = np.asarray(G.v)[diff]
+
+    tainted = _seed_taint(plan)
+    assert tainted.any()  # the oracle itself must see victims
+    while True:
+        hit = tainted[du] | tainted[dv]
+        before = tainted.sum()
+        tainted[du[hit]] = True
+        tainted[dv[hit]] = True
+        if tainted.sum() == before:
+            break
+    untouched = ~(tainted[du] | tainted[dv])
+    assert not untouched.any(), (
+        f"{site}: {int(untouched.sum())} differing edges outside the taint "
+        "closure of the injected fault"
+    )
+
+
+# ---------------------------------------------------------------------------
+# property: ANY plan + recover -> valid + maximal (bounded plan space so the
+# number of distinct XLA pipelines stays small)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.sampled_from(range(4)),
+    drop=st.sampled_from([0.0, 0.05, 0.3]),
+    corrupt=st.sampled_from([0.0, 0.05]),
+    lose=st.sampled_from([None, 0]),
+)
+def test_property_recover_always_completes(seed, drop, corrupt, lose):
+    plan = FaultPlan(
+        seed=seed, drop_proposals=drop, corrupt_state=corrupt,
+        lose_shard=lose,
+    )
+    result, _ = skipper_match(
+        edges=G, schedule=SCHED, backend="xla",
+        faults=plan, on_fault="recover",
+    )
+    _assert_valid_maximal(G, result.match_mask, f"prop/{plan}")
+
+
+# ---------------------------------------------------------------------------
+# forced multi-device chaos matrix (subprocess, D=4)
+# ---------------------------------------------------------------------------
+
+_CHAOS_SCRIPT = r"""
+import jax
+from repro.core import assert_matching
+from repro.core.faults import FaultPlan
+from repro.core.distributed import distributed_skipper
+from repro.graphs import erdos_renyi_graph
+
+assert jax.device_count() == 4
+g = erdos_renyi_graph(300, 900, seed=0)
+plans = {
+    "drop": FaultPlan(seed=7, drop_proposals=0.3),
+    "truncate": FaultPlan(seed=7, truncate_retry=0),
+    "corrupt": FaultPlan(seed=7, corrupt_state=0.05),
+    "lose_shard": FaultPlan(seed=7, lose_shard=1),
+    "skip_drain": FaultPlan(seed=7, skip_drain=True),
+}
+kinds = (
+    ("dispersed", dict(block_size=64, tile_size=64)),
+    ("sharded", dict(block_size=64, window=128, tile_size=64)),
+)
+for name, plan in plans.items():
+    for kind, kw in kinds:
+        result, stats = distributed_skipper(
+            g, faults=plan, on_fault="recover", verify=True, **kw
+        )
+        assert_matching(g, result.match_mask, f"chaos4/{name}/{kind}")
+        assert int(stats.recovery_attempts) <= 3, (name, kind)
+
+# fault-free at D=4: every recovery field exactly zero
+for kind, kw in kinds:
+    result, stats = distributed_skipper(g, on_fault="report", verify=True, **kw)
+    assert int(stats.recovery_attempts) == 0, kind
+    assert int(stats.residual_edges) == 0, kind
+    assert int(stats.recovered_matches) == 0, kind
+    assert int(stats.corrupted_cells) == 0, kind
+print("SUBPROCESS_OK")
+"""
+
+
+def test_chaos_matrix_forced_4dev():
+    _run_subprocess(_CHAOS_SCRIPT, num_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# check_matching degenerate inputs (satellite)
+# ---------------------------------------------------------------------------
+
+def _empty_graph(n):
+    return EdgeList(
+        jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32), n
+    )
+
+
+def test_check_matching_empty_edges():
+    g = _empty_graph(5)
+    chk = check_matching(g, jnp.zeros((0,), bool))
+    assert bool(chk["valid"]) and bool(chk["maximal"])
+
+
+def test_check_matching_zero_vertices():
+    g = _empty_graph(0)
+    chk = check_matching(g, jnp.zeros((0,), bool))
+    assert bool(chk["valid"]) and bool(chk["maximal"])
+
+
+def test_check_matching_dead_edges_do_not_alias_vertex0():
+    """Out-of-range / self-loop edges must not count as covering vertex 0:
+    the empty matching on a graph whose only real edge is (0, 1) is NOT
+    maximal, whatever junk rides along in the stream."""
+    g = EdgeList(
+        jnp.asarray([0, 3, 7], jnp.int32),
+        jnp.asarray([1, 3, 99], jnp.int32),  # self-loop, v out of range
+        num_vertices=8,
+    )
+    mask = jnp.zeros((3,), bool)
+    chk = check_matching(g, mask)
+    assert bool(chk["valid"])          # empty matching is always valid
+    assert not bool(chk["maximal"])    # (0, 1) is free -> not maximal
+
+    # matching the one real edge IS maximal; dead edges stay uncovered junk
+    chk = check_matching(g, jnp.asarray([True, False, False]))
+    assert bool(chk["valid"]) and bool(chk["maximal"])
