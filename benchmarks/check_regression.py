@@ -45,6 +45,11 @@ PREFIXES = {
     # by the plain pipeline row of the same run so the gate is exactly
     # "what do the hooks cost", machine speed cancelled
     "kernel/distributed_pipeline_hooks/": "kernel/distributed_pipeline/",
+    # state-width A/B: the single-byte default spec normalized by the
+    # same-run legacy_i32 twin on the SAME schedule — gates "narrow state
+    # must not cost throughput"; the byte-reduction claim itself is the
+    # hard STATE_BYTES_FIELDS check below
+    "kernel/state_u8/": "kernel/state_legacy_i32/",
 }
 # per-prefix overrides of the global --tolerance: the hooks row must track
 # the plain pipeline row within 2% (DESIGN.md §11 — default-off means free)
@@ -58,6 +63,11 @@ RECOVERY_FIELDS = (
     "recovery_attempts", "residual_edges",
     "recovered_matches", "corrupted_cells",
 )
+# state-width hard gate: the u8 row's recorded state payloads must undercut
+# its same-run legacy_i32 twin by at least this factor (DESIGN.md §12 — the
+# refactor's memory claim; analytic fields, so no timer noise allowance)
+STATE_BYTES_FIELDS = ("vmem_state_bytes", "wire_state_bytes")
+STATE_BYTES_MIN_REDUCTION = 3.5
 INFO_PREFIXES = {
     "kernel/windowed_pipeline_noreorder/": "kernel/jnp_matcher/",
 }
@@ -118,6 +128,27 @@ def main() -> int:
         if bad:
             print(f"{name}: nonzero recovery fields {bad} FAIL")
             failed.append(f"{name}: fault-free run reported {bad}")
+    for name, row in sorted(new_data.items()):
+        if not name.startswith("kernel/state_u8/"):
+            continue
+        twin = new_data.get(
+            "kernel/state_legacy_i32/" + name[len("kernel/state_u8/"):])
+        if twin is None:
+            failed.append(f"{name}: legacy_i32 twin missing from new run")
+            continue
+        for field in STATE_BYTES_FIELDS:
+            u8_b, i32_b = row.get(field), twin.get(field)
+            if not u8_b or not i32_b:
+                failed.append(f"{name}: missing byte field {field}")
+                continue
+            reduction = i32_b / u8_b
+            verdict = ("ok" if reduction >= STATE_BYTES_MIN_REDUCTION
+                       else "FAIL")
+            print(f"{name}: {field} reduction {reduction:.2f}x "
+                  f"(min {STATE_BYTES_MIN_REDUCTION}x) {verdict}")
+            if verdict == "FAIL":
+                failed.append(
+                    f"{name}: {field} reduced only {reduction:.2f}x")
     for name, r_base in sorted(base.items()):
         r_new = new.get(name)
         if r_new is None:

@@ -31,8 +31,17 @@ all of them):
                  ``kernel/distributed_jnp_local/*`` (the dispersed-block
                  jnp-local-pass baseline). The recorded JSON carries the
                  achieved ``intra`` fraction and collective payload
-                 (``gathered_ints``); check_regression.py gates the pipeline
+                 (``gathered_bytes``); check_regression.py gates the pipeline
                  row normalized by the jnp-local row of the same run.
+
+A state-width A/B pair rides with the windowed rows (``kernel/state_u8/*``
+vs ``kernel/state_legacy_i32/*``, interleaved min-of-N on the same
+schedule): the u8 row runs the default single-byte ``StateSpec``, the twin
+runs ``StateSpec.legacy_i32()`` (the exact pre-refactor i32 graph). The
+recorded extras carry ``state_bytes_per_vertex`` and the analytic
+VMEM/wire state payloads per spec; check_regression.py gates the u8 row's
+throughput normalized by the legacy twin AND hard-fails if the byte
+reduction drops below 3.5x.
 
 ``--reorder {none,degree,bfs,greedy}`` selects the locality renumbering the
 windowed pipeline's schedule is built with (``graphs/reorder.py``; default
@@ -59,6 +68,7 @@ import numpy as np
 from benchmarks.common import emit, time_call
 from repro.core.bipartite import bmatch_assign
 from repro.core.skipper import skipper
+from repro.core.statespec import StateSpec
 from repro.graphs import build_window_schedule, grid_graph, rmat_graph
 from repro.kernels.skipper_match import skipper_match
 from repro.kernels.skipper_match.ref import ref_match_window
@@ -196,6 +206,59 @@ def _bench_windowed(rows, extras, scale: str, smoke: bool, reorder: str):
             }
 
 
+def _bench_statewidth(rows, extras, scale: str, smoke: bool, reorder: str):
+    """State-width A/B on the full windowed pipeline: the default
+    single-byte spec vs ``StateSpec.legacy_i32()`` on the SAME schedule,
+    interleaved min-of-N. check_regression gates
+    ``kernel/state_u8/<graph>`` normalized by the same-run legacy twin
+    (>20% throughput regression fails) and hard-checks the recorded
+    VMEM/wire state-byte reduction (>= 3.5x — the refactor's memory
+    claim, DESIGN.md §12)."""
+    if smoke:
+        name, g = "rmat12", rmat_graph(12, 8, seed=1)
+        window, tile = 1024, 256
+    elif scale == "large":
+        name, g = "rmat16", rmat_graph(16, 16, seed=1)
+        window, tile = 4096, 256
+    else:
+        name, g = "rmat14", rmat_graph(14, 16, seed=1)
+        window, tile = 2048, 256
+    m = g.num_edges
+    backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    sched = build_window_schedule(g, window=window, tile_size=tile,
+                                  reorder=reorder)
+
+    specs = {
+        f"kernel/state_u8/{name}": StateSpec.u8(),
+        f"kernel/state_legacy_i32/{name}": StateSpec.legacy_i32(),
+    }
+    cells = [
+        (cell, lambda s=spec: skipper_match(schedule=sched, backend=backend,
+                                            spec=s))
+        for cell, spec in specs.items()
+    ]
+    iters = 9
+    times = {cell: [] for cell, _ in cells}
+    for _ in range(iters + 1):  # first pass = warmup/compile
+        for cell, fn in cells:
+            times[cell].append(time_call(fn, warmup=0, iters=1))
+    for cell, _ in cells:
+        spec = specs[cell]
+        t = min(times[cell][1:])
+        rows.append(emit(
+            cell, t,
+            f"{m / t / 1e6:.1f}Medges_s_{spec.vmem_bytes}B_state",
+        ))
+        extras[cell] = {
+            "reorder": sched.reorder,
+            "state_bytes_per_vertex": spec.vmem_bytes,
+            # analytic per-spec payloads of THIS schedule (windows.py):
+            # the revolving VMEM block(s) and the D=4 PHASE A wire combine
+            "vmem_state_bytes": sched.vmem_state_bytes(spec),
+            "wire_state_bytes": sched.wire_state_bytes(spec, num_devices=4),
+        }
+
+
 def _bench_boundary(rows, extras):
     """Boundary-heavy gated pair (runs in smoke too): rmat14 with NO reorder
     leaves the global tier dominant (intra ~0.13), so
@@ -322,21 +385,21 @@ def distributed_worker(scale: str, smoke: bool, reorder: str) -> None:
         }
         for cell, _ in cells:
             t = min(times[cell][1:])
-            gints = int(last[cell].gathered_ints)
+            gbytes = int(last[cell].gathered_bytes)
             if cell.startswith("kernel/distributed_pipeline/"):
                 derived = (f"{m / t / 1e6:.1f}Medges_s"
                            f"_intra{sched.intra_fraction:.2f}")
                 extras[cell] = {
                     "reorder": sched.reorder,
                     "intra": round(sched.intra_fraction, 4),
-                    "gathered_ints": gints,
+                    "gathered_bytes": gbytes,
                     "num_devices": 4,
                     **recovery,
                 }
             else:
                 derived = f"{m / t / 1e6:.1f}Medges_s"
                 extras[cell] = {
-                    "gathered_ints": gints,
+                    "gathered_bytes": gbytes,
                     "num_devices": 4,
                 }
             rows.append(f"{cell},{t * 1e6:.1f},{derived}")
@@ -381,6 +444,7 @@ def run(scale: str = "small", matcher: str = "both", smoke: bool = False,
         _bench_jnp(rows, extras, smoke)
     if matcher in ("both", "windowed"):
         _bench_windowed(rows, extras, scale, smoke, reorder)
+        _bench_statewidth(rows, extras, scale, smoke, reorder)
         _bench_boundary(rows, extras)
     if matcher in ("both", "distributed"):
         _bench_distributed(rows, extras, scale, smoke, reorder)

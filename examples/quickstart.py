@@ -56,7 +56,7 @@ def main():
     stats_s = {k: v.item() for k, v in check_matching(g, result_s.match_mask).items()}
     print(f"distributed (locality-sharded): {stats_s['num_matches']:,} matches | "
           f"proposals={int(sstats.proposals):,} (global tier only) "
-          f"gathered_ints={int(sstats.gathered_ints):,}")
+          f"gathered_bytes={int(sstats.gathered_bytes):,}")
 
     # 3c. graceful degradation (DESIGN.md §11): inject faults, inspect the
     # damage, recover. At D=1 the retry buffer never fills (requeues only

@@ -25,12 +25,13 @@ same work-efficiency story the paper tells for graphs.
 from __future__ import annotations
 
 from functools import partial
-from typing import Dict, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import engine
+from repro.core.statespec import StateSpec, resolve as resolve_spec
 
 # Default unrolled rounds per tile. NOT a correctness knob (the engine's
 # exact fallback reaches the sequential-greedy fixpoint from any unroll
@@ -59,6 +60,7 @@ BMATCH_VECTOR_ROUNDS = 2
         "vector_rounds",
         "conflict_method",
         "with_stats",
+        "spec",
     ),
 )
 def bmatch_assign(
@@ -73,6 +75,7 @@ def bmatch_assign(
     vector_rounds: int = BMATCH_VECTOR_ROUNDS,
     conflict_method: str = "auto",
     with_stats: bool = False,
+    spec: Optional[StateSpec] = None,
 ) -> Union[jax.Array, Tuple[jax.Array, Dict[str, jax.Array]]]:
     """Greedy maximal b-matching over a (pre-sorted) candidate edge stream.
 
@@ -92,7 +95,17 @@ def bmatch_assign(
     ``{"conflicts": int32, "fallback_tiles": int32}`` — total blocked-round
     count (Table II analogue) and how many tiles entered the exact
     while_loop fallback (the rounds-sensitivity instrumentation).
+
+    ``spec`` (``core/statespec.StateSpec``) sets the used-count width —
+    used counts ARE this problem's vertex state, so the default spec keeps
+    them at 1 B per token/expert whenever the static budgets fit the
+    at-rest dtype (``validate_capacity``), falling back to the i32
+    accumulator width otherwise; the engine widens to i32 at the gather
+    either way. Stats accumulate in int32 regardless of the spec.
     """
+    spec = resolve_spec(spec)
+    fits = spec.validate_capacity(max(token_budget, expert_capacity))
+    used_dt = spec.at_rest_dtype if fits else spec.accum_dtype
     m = token_ids.shape[0]
     pad = (-m) % tile_size
     tok = jnp.concatenate(
@@ -115,14 +128,16 @@ def bmatch_assign(
         return (used_t, used_e), (matched, conflicts, fb)
 
     carry0 = (
-        jnp.zeros((num_tokens,), jnp.int32),
-        jnp.zeros((num_experts,), jnp.int32),
+        jnp.zeros((num_tokens,), used_dt),
+        jnp.zeros((num_experts,), used_dt),
     )
     _, (matched, conflicts, fb) = jax.lax.scan(tile_step, carry0, (tok, exp))
     accept = matched.reshape(-1)[:m]
     if with_stats:
+        # conflicts come back i32 from the engine (no spec forwarded — they
+        # are summed here and must not wrap at a narrow width)
         stats = {
-            "conflicts": jnp.sum(conflicts).astype(jnp.int32),
+            "conflicts": jnp.sum(conflicts.astype(jnp.int32)),
             "fallback_tiles": jnp.sum(fb.astype(jnp.int32)),
         }
         return accept, stats

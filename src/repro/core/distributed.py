@@ -12,11 +12,13 @@ renumbered (`graphs/reorder.py`), bucketed into a two-tier
 Windows are disjoint vertex-id ranges, so each device resolves its dealt
 windows ENTIRELY locally through the device-resident pipeline
 (``engine.window_tier_pass`` — the same Pallas kernel / jnp twin
-``skipper_match`` runs), with zero proposals and zero replay; one psum of
-the per-window states (O(V) ints, no topology) then rebuilds the committed
-full state everywhere, and only the global tier (cross-window + coalesced
-sparse-window edges — the minority after reordering) runs the four-step
-protocol. Masks come back in original stream order and states in original
+``skipper_match`` runs), with zero proposals and zero replay; ONE O(V)
+collective over the per-window states (no topology) then rebuilds the
+committed full state everywhere — a width-honest combine in the active
+``StateSpec``'s wire dtype (rows are device-disjoint, so ``pmax`` is exact
+at any width; the legacy i32 spec keeps the historical ``psum``) — and only
+the global tier (cross-window + coalesced sparse-window edges — the
+minority after reordering) runs the four-step protocol. Masks come back in original stream order and states in original
 vertex ids through the schedule's ``stream_src``/``perm`` round-trip.
 
 Protocol per round (DESIGN.md §2 level 1; paper Alg. 1 adapted to SPMD):
@@ -62,8 +64,9 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
-from repro.core.types import ACC, MCHD, STATE_DTYPE, Counters, MatchResult
+from repro.core.types import ACC, MCHD, Counters, MatchResult
 from repro.core.engine import stream_pass, window_tier_pass
+from repro.core.statespec import DEFAULT, StateSpec, resolve as resolve_spec
 from repro.core.faults import (
     CORRUPT,
     FaultPlan,
@@ -102,11 +105,26 @@ class DistStats:
     requeued: jax.Array         # edges requeued (spin-wait analogue)
     retry_overflow: jax.Array   # edges dropped by a full retry buffer (must be 0)
     undrained: jax.Array        # retry entries alive after drain rounds (must be 0)
-    gathered_ints: jax.Array    # collective payload (int32 count) over the run
+    gathered_bytes: jax.Array   # collective payload BYTES over the run:
+    #   int32 proposal-index gathers + the O(V) state assembly in the
+    #   active StateSpec's wire width (was `gathered_ints`, an i32 count)
     recovery_attempts: jax.Array | int = 0  # ladder steps that did real work
     residual_edges: jax.Array | int = 0     # valid edges left undecided
     recovered_matches: jax.Array | int = 0  # matches added by the replay
     corrupted_cells: jax.Array | int = 0    # out-of-domain state bytes seen
+
+    @property
+    def gathered_ints(self):
+        """Deprecated alias (one release): the old i32-word count. The
+        payload is no longer all-i32 — prefer :attr:`gathered_bytes`."""
+        import warnings
+
+        warnings.warn(
+            "DistStats.gathered_ints is deprecated; use gathered_bytes "
+            "(the wire payload is no longer uniformly int32)",
+            DeprecationWarning, stacklevel=2,
+        )
+        return self.gathered_bytes // 4
 
     @property
     def ok(self) -> bool:
@@ -153,8 +171,9 @@ def _make_round_fn(
     The carry is ``(state, mask, ru, rv, ri, stats)`` where ``mask`` is a
     bool[mask_len] of replay winners indexed by the per-edge stream index
     carried in ``ri``/the block index arrays, and ``stats`` is the 9-tuple
-    ``(props, req, ovf, gints, reads, loads_local, loads_replay,
-    stores_replay, winners)``. Stats marked *local* count only this device's
+    ``(props, req, ovf, gbytes, reads, loads_local, loads_replay,
+    stores_replay, winners)`` (``gbytes`` counts wire BYTES — proposal
+    slots are int32 stream indices/endpoints, 4 B each). Stats marked *local* count only this device's
     REAL edge work — padded sentinel slots (-1) scanned during padding and
     drain rounds contribute nothing — and get psum'd at the end; the replay
     terms are identical on every device (the replay is replicated) and are
@@ -226,13 +245,13 @@ def _make_round_fn(
             gj = jnp.clip(gi, 0, lu.shape[0] - 1)
             gu = jnp.where(live, lu[gj], -1)
             gv = jnp.where(live, lv[gj], -1)
-            round_gints = slab_t * num_devices
+            round_gbytes = 4 * slab_t * num_devices  # 1 i32 index per slot
         else:
             pu = jnp.where(sent, u, -1)
             pv = jnp.where(sent, v, -1)
             gu = jax.lax.all_gather(pu, axis_name).T.reshape(-1)
             gv = jax.lax.all_gather(pv, axis_name).T.reshape(-1)
-            round_gints = 3 * slab_t * num_devices
+            round_gbytes = 3 * 4 * slab_t * num_devices  # (u, v, idx) i32s
 
         # 3. REPLAY on the committed state (deterministic first-claim order)
         new_state, winners, _ = stream_pass(
@@ -270,12 +289,12 @@ def _make_round_fn(
         # all devices' proposals, read once each by the (replicated) replay
         n_replayed = jnp.sum((gu >= 0) & (gu != gv)).astype(jnp.int32)
 
-        props, req, ovf, gints, reads, l_loc, l_rep, s_rep, wins = stats
+        props, req, ovf, gbytes, reads, l_loc, l_rep, s_rep, wins = stats
         stats = (
             props + n_props,
             req + nreq,
             ovf + overflow,
-            gints + round_gints,
+            gbytes + round_gbytes,
             reads + nvalid,
             l_loc + 2 * nvalid + 2 * nconf,
             l_rep + 2 * n_replayed,
@@ -300,7 +319,7 @@ def _drain_blocks(drain_rounds: int, block: int):
 def _aggregate_stats(stats, ru, axis_name):
     """Post-drain stats aggregation: psum the per-device entries, count
     undrained retries, pass replicated entries through."""
-    props, req, ovf, gints, reads, l_loc, l_rep, s_rep, wins = stats
+    props, req, ovf, gbytes, reads, l_loc, l_rep, s_rep, wins = stats
     und = jnp.sum(ru >= 0)
     agg = lambda x: jax.lax.psum(x, axis_name)
     return (
@@ -308,7 +327,7 @@ def _aggregate_stats(stats, ru, axis_name):
         agg(req),
         agg(ovf),
         agg(und),
-        gints,            # identical on every device already
+        gbytes,           # identical on every device already
         agg(reads),
         agg(l_loc),
         l_rep,            # replay is replicated: count once
@@ -330,8 +349,12 @@ def dispersed_skipper_fn(
     tile_size: int,
     drain_rounds: int,
     faults: Optional[FaultPlan] = None,
+    spec: StateSpec = DEFAULT,
 ) -> Tuple[jax.Array, jax.Array, Tuple[jax.Array, ...]]:
-    """Per-device body of the dispersed (raw stream block) schedule."""
+    """Per-device body of the dispersed (raw stream block) schedule. The
+    replicated state array lives at ``spec.at_rest`` width (1 B/vertex by
+    default — there is no VMEM/wire split on this path: proposals, not
+    state, go over the wire)."""
     n = num_vertices
     # shard_map delivers the device-sharded leading axis as size 1: squeeze.
     u_blocks = u_blocks.reshape(u_blocks.shape[-2:])
@@ -350,13 +373,14 @@ def dispersed_skipper_fn(
         faults=faults,
     )
 
-    state0 = jnp.full((n,), ACC, STATE_DTYPE)
+    state_dt = spec.at_rest_dtype
+    state0 = jnp.full((n,), ACC, state_dt)
     if faults is not None and faults.corrupt_state > 0.0:
         # FAULT: out-of-domain bytes in the committed state — the affected
         # vertices look permanently non-free (neither ACC nor MCHD), so
         # every edge on them dies without being decided
         state0 = jnp.where(
-            corruption_mask(faults, n), jnp.asarray(CORRUPT, STATE_DTYPE), state0
+            corruption_mask(faults, n), jnp.asarray(CORRUPT, state_dt), state0
         )
     mask0 = jnp.zeros((num_edges_padded,), jnp.bool_)
     empty = jnp.full((block,), -1, jnp.int32)
@@ -394,6 +418,7 @@ def locality_sharded_fn(
     backend: str,
     interpret: bool,
     faults: Optional[FaultPlan] = None,
+    spec: StateSpec = DEFAULT,
 ):
     """Per-device body of the locality-sharded schedule.
 
@@ -401,9 +426,12 @@ def locality_sharded_fn(
     rows run through the device-resident pipeline — the identical
     ``engine.window_tier_pass`` entry point ``skipper_match`` uses, so each
     window's result is bit-identical to the single-device pipeline no matter
-    which device it was dealt to. One psum of the per-row states (disjoint
-    row slots; O(num_rows * window) ints, no topology) rebuilds the
-    committed full state on every device.
+    which device it was dealt to. One ``spec.combine_rows`` collective over
+    the per-row states (disjoint row slots; O(num_rows * window) *
+    ``spec.wire_bytes`` bytes, no topology) rebuilds the committed full
+    state on every device — max-combine is exact because each row has at
+    most one non-zero contributor, and ``lose_shard`` zeroing composes
+    (zeros lose to real values).
 
     PHASE B (global tier): the boundary blocks run the four-step
     propose/gather/replay protocol against that committed state — same
@@ -432,6 +460,7 @@ def locality_sharded_fn(
         vector_rounds=vector_rounds,
         backend=backend,
         interpret=interpret,
+        spec=spec,
     )
     w_valid = u_rows >= 0
     if faults is not None and faults.lose_shard is not None:
@@ -444,20 +473,21 @@ def locality_sharded_fn(
         states = jnp.where(lost, jnp.zeros_like(states), states)
         matched_w = jnp.where(lost, jnp.zeros_like(matched_w), matched_w)
     # assemble the committed full state: scatter this device's rows into
-    # schedule-row order (disjoint across devices), psum, then place rows at
-    # their window ids (two-tier compaction; coalesced windows stay all-ACC
-    # — their edges are global-tier).
+    # schedule-row order (disjoint across devices), combine at the spec's
+    # wire width, then place rows at their window ids (two-tier compaction;
+    # coalesced windows stay all-ACC — their edges are global-tier).
+    wire_dt = spec.wire_dtype
     slot = jnp.where(row_slot >= 0, row_slot, num_rows)
     rows_state = (
-        jnp.zeros((num_rows, window), jnp.int32)
-        .at[slot].set(states.astype(jnp.int32), mode="drop")
+        jnp.zeros((num_rows, window), wire_dt)
+        .at[slot].set(states.astype(wire_dt), mode="drop")
     )
-    rows_state = jax.lax.psum(rows_state, axis_name)
+    rows_state = spec.combine_rows(rows_state, axis_name)
     flat = (
-        jnp.zeros((num_windows, window), jnp.int32)
+        jnp.zeros((num_windows, window), wire_dt)
         .at[window_ids].set(rows_state)
         .reshape(n_flat)
-        .astype(STATE_DTYPE)
+        .astype(spec.at_rest_dtype)
     )
     if faults is not None and faults.corrupt_state > 0.0:
         # FAULT: corrupt the assembled committed state (renumbered-flat id
@@ -465,24 +495,31 @@ def locality_sharded_fn(
         # to the single-device pipeline's
         flat = jnp.where(
             corruption_mask(faults, n_flat),
-            jnp.asarray(CORRUPT, STATE_DTYPE),
+            jnp.asarray(CORRUPT, spec.at_rest_dtype),
             flat,
         )
 
     # ---- PHASE B: global tier via propose/gather/replay -----------------
     num_rounds, block = bu_blocks.shape
     nvalid_w = jnp.sum(w_valid).astype(jnp.int32)
-    nconf_w = jnp.sum(jnp.where(w_valid, conf_w, 0)).astype(jnp.int32)
+    # counters may be spec-narrowed (uint8): widen BEFORE summing so a
+    # window tier with >255 conflicts/matches can't wrap the stats
+    nconf_w = jnp.sum(
+        jnp.where(w_valid, conf_w.astype(jnp.int32), 0)
+    ).astype(jnp.int32)
     # stores of the window tier happen per device; the stores slot of the
     # stats tuple is a count-once (replicated) entry, so pre-psum here.
     nmatch_w = jax.lax.psum(
-        jnp.sum(jnp.where(w_valid, matched_w, 0)).astype(jnp.int32), axis_name
+        jnp.sum(
+            jnp.where(w_valid, matched_w.astype(jnp.int32), 0)
+        ).astype(jnp.int32),
+        axis_name,
     )
     z = jnp.zeros((), jnp.int32)
-    state_psum_ints = jnp.asarray(
-        num_devices * num_rows * window, jnp.int32
-    )  # the PHASE A psum payload — O(V), no topology
-    stats0 = (z, z, z, state_psum_ints, nvalid_w,
+    state_wire_bytes = jnp.asarray(
+        num_devices * num_rows * window * spec.wire_bytes, jnp.int32
+    )  # the PHASE A combine payload — O(V) at wire width, no topology
+    stats0 = (z, z, z, state_wire_bytes, nvalid_w,
               2 * nvalid_w + 2 * nconf_w, z, 2 * nmatch_w, z)
 
     if num_rounds > 0:
@@ -513,7 +550,7 @@ def locality_sharded_fn(
         stats = stats0
 
     stats_out = _aggregate_stats(stats, ru, axis_name)
-    matched_out = jnp.where(w_valid, matched_w, 0).astype(jnp.int32)
+    matched_out = jnp.where(w_valid, matched_w.astype(jnp.int32), 0)
     return (
         flat,
         matched_out.reshape((1,) + matched_out.shape),
@@ -525,12 +562,12 @@ def locality_sharded_fn(
 @lru_cache(maxsize=32)
 def _compiled_dispersed(
     mesh, axis_name, num_devices, num_vertices, num_edges_padded,
-    vector_rounds, tile_size, drain_rounds, faults=None,
+    vector_rounds, tile_size, drain_rounds, faults=None, spec=DEFAULT,
 ):
     """One compiled shard_map per static config — rebuilding shard_map+jit
     per call would retrace/recompile every time (~100x the actual run time
     on the bench graphs). Mesh is hashable and participates in the key, as
-    does the (frozen, default-None) fault plan."""
+    do the (frozen, default-None) fault plan and the (frozen) state spec."""
     fn = partial(
         dispersed_skipper_fn,
         num_vertices=num_vertices,
@@ -541,6 +578,7 @@ def _compiled_dispersed(
         tile_size=tile_size,
         drain_rounds=drain_rounds,
         faults=faults,
+        spec=spec,
     )
     shard = compat.shard_map(
         fn,
@@ -556,11 +594,12 @@ def _compiled_dispersed(
 def _compiled_sharded(
     mesh, axis_name, num_devices, window, tiles_per_window, tile_size,
     num_rows, num_windows, num_boundary_padded, vector_rounds, drain_rounds,
-    backend, interpret, faults=None,
+    backend, interpret, faults=None, spec=DEFAULT,
 ):
     """Compiled locality-sharded body per static schedule shape (the
     schedule ARRAYS are runtime inputs, including window_ids); the frozen
-    fault plan (default None) is part of the static key."""
+    fault plan (default None) and the frozen state spec are part of the
+    static key."""
     fn = partial(
         locality_sharded_fn,
         window=window,
@@ -576,6 +615,7 @@ def _compiled_sharded(
         backend=backend,
         interpret=interpret,
         faults=faults,
+        spec=spec,
     )
     shard = compat.shard_map(
         fn,
@@ -601,7 +641,7 @@ def _mesh_and_devices(mesh: Optional[Mesh], axis_name: str):
 def _finalize(mask, state, stats):
     """Shared host-level epilogue: counters + stats assembly (no policy —
     ``_apply_policy`` owns raising / recovering / reporting)."""
-    props, req, ovf, und, gints, reads, l_loc, l_rep, s_rep, wins = stats
+    props, req, ovf, und, gbytes, reads, l_loc, l_rep, s_rep, wins = stats
     lost = props - wins  # proposals that did not win the replay
     counters = Counters(
         edge_reads=reads.astype(jnp.int32),
@@ -616,7 +656,7 @@ def _finalize(mask, state, stats):
         requeued=req,
         retry_overflow=ovf,
         undrained=und,
-        gathered_ints=gints,
+        gathered_bytes=gbytes,
     )
     return result, dstats
 
@@ -643,6 +683,7 @@ def _apply_policy(
     drain_rounds: int,
     tile_size: int,
     vector_rounds: int,
+    spec: StateSpec = DEFAULT,
 ) -> Tuple[MatchResult, DistStats]:
     """The recovery ladder (DESIGN.md §11), shared by both schedules.
 
@@ -701,7 +742,7 @@ def _apply_policy(
             result, dstats = run(bs, dr)
         mask, state, residual, recovered, corrupted = residual_replay(
             edges, result.match_mask, result.state,
-            tile_size=tile_size, vector_rounds=vector_rounds,
+            tile_size=tile_size, vector_rounds=vector_rounds, spec=spec,
         )
         res_i, cor_i = jax.device_get((residual, corrupted))
         if int(res_i) > 0 or int(cor_i) > 0:
@@ -767,6 +808,7 @@ def distributed_skipper(
     on_fault: str = "raise",
     verify: bool = False,
     faults: Optional[FaultPlan] = None,
+    spec: Optional[StateSpec] = None,
 ) -> Tuple[MatchResult, DistStats]:
     """Run Skipper across the devices of ``mesh`` along ``axis_name``.
 
@@ -804,8 +846,15 @@ def distributed_skipper(
     (and fills the DistStats degradation fields); ``faults=`` threads a
     :class:`FaultPlan` into the compiled bodies for chaos testing —
     ``None`` (default) compiles to exactly the pre-fault-harness graph.
+
+    ``spec=`` (a ``core/statespec.StateSpec``, default the package-wide
+    uint8 default) sets the per-tier state widths: the at-rest/replicated
+    arrays, the window tier's VMEM carry, and the PHASE A state-assembly
+    wire payload. ``StateSpec.legacy_i32()`` reproduces the pre-spec
+    int32+psum graph bit-for-bit (test-pinned).
     """
     mesh, num_devices = _mesh_and_devices(mesh, axis_name)
+    spec = resolve_spec(spec)
     if faults is not None and not faults.active:
         faults = None  # all sites off: share the clean compiled body
     drain_eff = 0 if (faults is not None and faults.skip_drain) else None
@@ -824,13 +873,14 @@ def distributed_skipper(
             return _dispersed_skipper(
                 edges, mesh, axis_name, num_devices, bs, vector_rounds,
                 tile_size, dr if drain_eff is None else drain_eff, faults,
+                spec,
             )
 
         return _apply_policy(
             run_dispersed, edges,
             on_fault=on_fault, verify=verify, faults=faults,
             block_size=block_size, drain_rounds=drain_rounds,
-            tile_size=tile_size, vector_rounds=vector_rounds,
+            tile_size=tile_size, vector_rounds=vector_rounds, spec=spec,
         )
 
     if device_schedule is None:
@@ -864,20 +914,20 @@ def distributed_skipper(
         return _sharded_run(
             ds, mesh, axis_name, num_devices, vector_rounds,
             dr if drain_eff is None else drain_eff, backend,
-            bool(interpret), faults,
+            bool(interpret), faults, spec,
         )
 
     return _apply_policy(
         run_sharded, edges,
         on_fault=on_fault, verify=verify, faults=faults,
         block_size=bs0, drain_rounds=drain_rounds,
-        tile_size=tile_size, vector_rounds=vector_rounds,
+        tile_size=tile_size, vector_rounds=vector_rounds, spec=spec,
     )
 
 
 def _sharded_run(
     device_schedule, mesh, axis_name, num_devices, vector_rounds,
-    drain_rounds, backend, interpret, faults,
+    drain_rounds, backend, interpret, faults, spec=DEFAULT,
 ):
     """One locality-sharded execution + host epilogue (no policy)."""
     schedule = device_schedule.schedule
@@ -887,7 +937,7 @@ def _sharded_run(
         mesh, axis_name, num_devices, schedule.window,
         schedule.tiles_per_window, schedule.tile_size, num_rows,
         schedule.num_windows, schedule.num_boundary_padded, vector_rounds,
-        drain_rounds, backend, interpret, faults,
+        drain_rounds, backend, interpret, faults, spec,
     )
     flat, matched_w, bmask, stats = run(
         jnp.asarray(device_schedule.u_rows),
@@ -921,13 +971,13 @@ def _sharded_run(
     perm = schedule.perm
     if perm is None:
         perm = np.arange(schedule.num_vertices, dtype=np.int32)
-    state = flat[jnp.asarray(perm)].astype(STATE_DTYPE)
+    state = flat[jnp.asarray(perm)].astype(spec.at_rest_dtype)
     return _finalize(mask, state, stats)
 
 
 def _dispersed_skipper(
     edges, mesh, axis_name, num_devices, block_size, vector_rounds,
-    tile_size, drain_rounds, faults,
+    tile_size, drain_rounds, faults, spec=DEFAULT,
 ):
     """One raw dispersed-block execution (paper §IV-C), D >= 1 (no policy)."""
     n = edges.num_vertices
@@ -944,7 +994,7 @@ def _dispersed_skipper(
 
     run = _compiled_dispersed(
         mesh, axis_name, num_devices, n, num_edges_padded, vector_rounds,
-        tile_size, drain_rounds, faults,
+        tile_size, drain_rounds, faults, spec,
     )
     state, mask_padded, stats = run(ub, vb, ib)
 

@@ -76,8 +76,9 @@ drivers:
   one function, so the two matchers cannot drift.
 
 State encoding is the paper's: ACC=0, MCHD=2 (comparisons below use plain
-ints so they work for the uint8 at-rest array and the int32 VMEM window
-alike).
+ints so they work at every ``StateSpec`` width — uint8 at-rest / VMEM state
+and the legacy int32 graph alike; ``core/statespec.py`` is the single
+source of truth for which tier carries which dtype).
 """
 from __future__ import annotations
 
@@ -85,6 +86,8 @@ from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.statespec import StateSpec, resolve as resolve_spec
 
 ACC = 0
 MCHD = 2
@@ -327,8 +330,8 @@ def first_k_claim_commit(
         full endpoint is not free and simply stays unmatched (dead) — no
         explicit kill list is needed.
     """
-    room_u = cap_u - used_u.astype(jnp.int32)
-    room_v = cap_v - used_v.astype(jnp.int32)
+    room_u = cap_u - used_u.astype(jnp.int32)  # state-dtype: ok (widen at gather)
+    room_v = cap_v - used_v.astype(jnp.int32)  # state-dtype: ok (widen at gather)
     free = valid & (~matched) & (room_u > 0) & (room_v > 0)
     rank_u, rank_v = rank_fn(free)
     blocked = free & ((rank_u >= room_u) | (rank_v >= room_v))
@@ -644,6 +647,7 @@ def tile_pass(
     vector_rounds: int,
     fallback: bool = True,
     conflict_method: str = "auto",
+    spec: Optional[StateSpec] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Process one edge tile (first-claim vector rounds + exact vectorized
     fallback, unless ``fallback=False``) against a full ``state`` array of
@@ -652,7 +656,9 @@ def tile_pass(
     epilogue (DESIGN.md §1, §3).
 
     Args:
-        state: uint8/int32[n] vertex states (ACC/MCHD; dtype-agnostic).
+        state: spec-width[n] vertex states (ACC/MCHD): the pass is
+            width-polymorphic — the state keeps the caller's (spec's)
+            dtype through gather/scatter, comparisons use plain ints.
         u, v: int32[T] endpoint ids; invalid edges are ``u < 0`` or
             ``u == v`` (pad convention of ``graphs/windows.py``).
         n: static vertex count (shape of ``state``).
@@ -667,6 +673,11 @@ def tile_pass(
             ``"matrix"`` (the compiled Pallas boundary kernel forces matrix
             because Mosaic has no sort/scatter). All compute the identical
             function, so the choice never changes output.
+        spec: optional :class:`StateSpec`. When given, the per-edge
+            ``conflicts`` output is narrowed to ``spec.counter`` (exact:
+            conflicts <= vector_rounds, validated at trace time). When
+            ``None`` conflicts stay in the i32 accumulator width — callers
+            that sum conflicts (distributed stats, replay) rely on that.
 
     Returns:
         ``(state, matched, conflicts_per_edge, fallback_taken)``; every
@@ -712,6 +723,9 @@ def tile_pass(
         u, v, valid, read_state, apply_commits, vector_rounds, blocked_fn
     )
     state = cell[...]
+    if spec is not None:
+        spec.validate_rounds(vector_rounds)
+        conflicts = conflicts.astype(spec.counter_dtype)
 
     if not fallback:
         return state, matched, conflicts, jnp.zeros((), jnp.bool_)
@@ -731,6 +745,7 @@ def stream_pass(
     vector_rounds: int,
     tile_size: int,
     conflict_method: str = "auto",
+    spec: Optional[StateSpec] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Greedy first-claim pass over an [L]-sized edge slab in stream order,
     tiled by ``tile_size`` (``L % tile_size == 0``; -1 marks padding):
@@ -742,7 +757,9 @@ def stream_pass(
     replay (``core/faults.py``) — the recovery path cannot drift from the
     protocol it recovers.
 
-    Returns ``(state, matched bool[L], conflicts int32[L])``.
+    Returns ``(state, matched bool[L], conflicts[L])`` — conflicts in the
+    i32 accumulator width, or ``spec.counter`` when a spec is passed (see
+    :func:`tile_pass`); the state keeps its input (spec) dtype.
     """
     l = u.shape[0]
     num_tiles = l // tile_size
@@ -753,7 +770,7 @@ def stream_pass(
         uu, vv = uv
         st, matched, conflicts, _ = tile_pass(
             st, uu, vv, n=n, vector_rounds=vector_rounds,
-            conflict_method=conflict_method,
+            conflict_method=conflict_method, spec=spec,
         )
         return st, (matched, conflicts)
 
@@ -772,6 +789,7 @@ def tile_pass_pair(
     vector_rounds: int,
     fallback: bool = True,
     conflict_method: str = "auto",
+    spec: Optional[StateSpec] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Two-block variant of :func:`tile_pass` — the block-pair boundary
     epilogue's decision step (DESIGN.md §10).
@@ -799,10 +817,11 @@ def tile_pass_pair(
     the order is irrelevant.
 
     Args:
-        state_rows: uint8/int32[num_windows, window] blocked vertex states.
+        state_rows: spec-width[num_windows, window] blocked vertex states
+            (the pass keeps the caller's dtype).
         u_loc, v_loc: int32[T] offset-local endpoint ids (-1 padding).
         blk_u, blk_v: scalar int32 state-block (window) ids of the pair.
-        window / vector_rounds / fallback / conflict_method: as in
+        window / vector_rounds / fallback / conflict_method / spec: as in
             :func:`tile_pass` (``n`` is implied: 2 * window).
 
     Returns:
@@ -813,7 +832,7 @@ def tile_pass_pair(
     pair = jnp.concatenate([row_u, row_v])
     pair, matched, conflicts, taken = tile_pass(
         pair, u_loc, v_loc, n=2 * window, vector_rounds=vector_rounds,
-        fallback=fallback, conflict_method=conflict_method,
+        fallback=fallback, conflict_method=conflict_method, spec=spec,
     )
     state_rows = jax.lax.dynamic_update_index_in_dim(
         state_rows, pair[window:], blk_v, 0
@@ -835,13 +854,18 @@ def tile_pass_capacitated(
     vector_rounds: int,
     fallback: bool = True,
     conflict_method: str = "auto",
+    spec: Optional[StateSpec] = None,
 ) -> Tuple[Tuple[jax.Array, jax.Array], jax.Array, jax.Array, jax.Array]:
     """Capacitated twin of :func:`tile_pass` (DESIGN.md §9): process one edge
     tile against per-side used-count states with per-side budgets.
 
     Args:
-        used_u: int32[n_u] used counts of the u side (e.g. per-token).
-        used_v: int32[n_v] used counts of the v side (e.g. per-expert).
+        used_u: [n_u] used counts of the u side (e.g. per-token) — the
+            used counts are this problem's vertex state, so callers may
+            allocate them at the spec's at-rest width when the static
+            budgets fit (``StateSpec.validate_capacity``); the rank/room
+            comparisons widen to i32 at the gather like everywhere else.
+        used_v: [n_v] used counts of the v side (e.g. per-expert).
         u, v: int32[T] per-edge side ids; ``-1`` marks padding (validity is
             ``(u >= 0) & (v >= 0)`` — no ``u != v`` check: the sides are
             independent id spaces, unlike the unipartite :func:`tile_pass`).
@@ -884,6 +908,9 @@ def tile_pass_capacitated(
         rank_fn, capacities=(cap_u, cap_v),
     )
     state = cell[...]
+    if spec is not None:
+        spec.validate_rounds(vector_rounds)
+        conflicts = conflicts.astype(spec.counter_dtype)
 
     if not fallback:
         return state, matched, conflicts, jnp.zeros((), jnp.bool_)
@@ -905,6 +932,7 @@ def window_tier_pass(
     vector_rounds: int,
     backend: str,
     interpret: bool = True,
+    spec: Optional[StateSpec] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Run the window tier of a two-tier schedule: each row is one window's
     dispersed tile stream, matched from an all-ACC window-local state
@@ -916,8 +944,8 @@ def window_tier_pass(
     ``backend="pallas"`` launches the 2-D-grid revolving-VMEM kernel
     (``build_pipeline_matcher``); ``backend="xla"`` runs the bit-identical
     jnp twin (``ref.make_ref_pipeline`` — a flat scan in the exact grid
-    order, uint8 state). Imports are deferred: the kernel modules themselves
-    import this module.
+    order). Imports are deferred: the kernel modules themselves import this
+    module.
 
     Args:
         u_rows, v_rows: int32[num_rows, tiles_per_window * tile_size]
@@ -927,31 +955,36 @@ def window_tier_pass(
         vector_rounds: forwarded to the per-tile rounds (pure tuning).
         backend: ``"pallas"`` or ``"xla"``.
         interpret: Pallas interpreter flag (ignored by the xla twin).
+        spec: optional :class:`StateSpec` (None -> the default). Both
+            backends allocate state in ``spec.vmem`` and emit
+            matched/conflicts in ``spec.counter``, so the two compiled
+            graphs stay dtype-identical, not just value-identical.
 
     Returns:
         ``(states, matched, conflicts)`` with ``states`` of shape
-        ``[num_rows, window]`` (int32 on the pallas path, uint8 on xla —
-        values identical, test-pinned) and ``matched``/``conflicts`` int32
-        of ``u_rows``'s shape.
+        ``spec.vmem[num_rows, window]`` and ``matched``/``conflicts``
+        ``spec.counter`` of ``u_rows``'s shape (values identical across
+        backends and specs, test-pinned).
 
     Invariant: each row's result depends only on that row's tiles (windows
     are disjoint vertex ranges), which is what lets the distributed matcher
     deal rows to devices with zero communication.
     """
+    spec = resolve_spec(spec)
     num_rows = u_rows.shape[0]
     if backend == "pallas":
         from repro.kernels.skipper_match.kernel import build_pipeline_matcher
 
         call = build_pipeline_matcher(
             num_rows, tiles_per_window, tile_size, window,
-            vector_rounds, True, interpret,
+            vector_rounds, True, interpret, spec,
         )
-        state0 = jnp.zeros((num_rows, window), jnp.int32)
+        state0 = jnp.zeros((num_rows, window), spec.vmem_dtype)
         states, matched, conflicts = call(u_rows, v_rows, state0)
     elif backend == "xla":
         from repro.kernels.skipper_match.ref import make_ref_pipeline
 
-        run = make_ref_pipeline(window, vector_rounds)
+        run = make_ref_pipeline(window, vector_rounds, spec=spec)
         states, matched, conflicts = run(
             u_rows.reshape(num_rows, tiles_per_window, tile_size),
             v_rows.reshape(num_rows, tiles_per_window, tile_size),

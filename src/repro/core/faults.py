@@ -56,7 +56,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import ACC, MCHD, stream_pass
-from repro.core.types import STATE_DTYPE
+from repro.core.statespec import StateSpec, resolve as resolve_spec
 from repro.graphs.types import EdgeList
 
 __all__ = [
@@ -145,13 +145,18 @@ def corruption_mask(plan: FaultPlan, num_cells: int) -> jax.Array:
     return jax.random.bernoulli(key, plan.corrupt_state, (num_cells,))
 
 
-def _rebuild_and_residual(e: EdgeList, match_mask, state):
+def _rebuild_and_residual(e: EdgeList, match_mask, state,
+                          spec: Optional[StateSpec] = None):
     """Shared detection core: mask-rebuilt state, residual-edge mask, and
-    the out-of-domain cell count of the (untrusted) returned ``state``."""
+    the out-of-domain cell count of the (untrusted) returned ``state``.
+    The rebuild is allocated at the spec's at-rest width (the incoming
+    ``state`` is inspected dtype-agnostically — plain-int compares — so
+    detection works at any width)."""
+    spec = resolve_spec(spec)
     n = e.num_vertices
     valid = (e.u != e.v) & (e.u >= 0) & (e.v < n)
     sel = match_mask & valid
-    rebuilt = jnp.full((n + 1,), ACC, STATE_DTYPE)
+    rebuilt = jnp.full((n + 1,), ACC, spec.at_rest_dtype)
     rebuilt = rebuilt.at[jnp.where(sel, e.u, n)].set(MCHD, mode="drop")
     rebuilt = rebuilt.at[jnp.where(sel, e.v, n)].set(MCHD, mode="drop")
     # index n = guard slot (ACC) so invalid edges never read a real vertex
@@ -179,11 +184,15 @@ def detect_residual(
     return _detect(edges.canonical(), match_mask, state)
 
 
-@partial(jax.jit, static_argnames=("tile_size", "vector_rounds"))
-def _replay(e: EdgeList, match_mask, state, tile_size: int, vector_rounds: int):
+@partial(jax.jit, static_argnames=("tile_size", "vector_rounds", "spec"))
+def _replay(e: EdgeList, match_mask, state, tile_size: int, vector_rounds: int,
+            spec: Optional[StateSpec] = None):
+    spec = resolve_spec(spec)
     n = e.num_vertices
     m = e.num_edges
-    rebuilt, residual, corrupted = _rebuild_and_residual(e, match_mask, state)
+    rebuilt, residual, corrupted = _rebuild_and_residual(
+        e, match_mask, state, spec
+    )
     # feed ONLY the residual edges to the engine (others masked invalid),
     # padded to a tile multiple, in stream order — the replay is literally
     # one more single pass over the (residual) edges.
@@ -214,6 +223,7 @@ def residual_replay(
     *,
     tile_size: int = 256,
     vector_rounds: int = 1,
+    spec: Optional[StateSpec] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """The recovery ladder's final rung: complete a (possibly degraded)
     matching into a valid+maximal one on the uncorrupted graph.
@@ -225,8 +235,10 @@ def residual_replay(
     corrupted_cells)`` where the returned state is the *clean* rebuilt one
     (corruption does not survive). ``residual_edges == 0`` and
     ``corrupted_cells == 0`` means the input was already maximal and clean,
-    and the mask comes back unchanged.
+    and the mask comes back unchanged. ``spec`` sets the rebuilt state's
+    at-rest width (the replay itself is width-polymorphic).
     """
     return _replay(
-        edges.canonical(), match_mask, state, tile_size, vector_rounds
+        edges.canonical(), match_mask, state, tile_size, vector_rounds,
+        resolve_spec(spec),
     )

@@ -52,8 +52,9 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import ACC, STATE_DTYPE, Counters, MatchResult
+from repro.core.types import ACC, Counters, MatchResult
 from repro.core.engine import tile_pass
+from repro.core.statespec import StateSpec, resolve as resolve_spec
 from repro.graphs.types import EdgeList
 from repro.graphs.partition import pad_edges
 
@@ -68,6 +69,7 @@ def skipper(
     dispersed: bool = True,
     conflict_method: str = "auto",
     verify: bool = False,
+    spec: Optional[StateSpec] = None,
 ) -> Tuple[MatchResult, Optional[jax.Array]]:
     """Single-pass tiled Skipper. Returns (MatchResult, conflicts_per_edge?).
 
@@ -76,13 +78,18 @@ def skipper(
     ``conflict_method`` is forwarded to ``engine.tile_pass``'s blocked
     predicate selection (never changes output; see DESIGN.md §3).
 
+    ``spec`` (``core/statespec.StateSpec``) sets the state array's at-rest
+    width — the default is the package-wide 1 B/vertex spec, the paper's
+    encoding. The engine's conflict counters stay int32 here regardless
+    (they are summed per tile; see ``StateSpec`` on accumulator policy).
+
     ``verify=True`` runs ``core/validate.check_matching`` on the result and
     raises ``RuntimeError`` if it is not a valid maximal matching — a
     host-side self-check (it synchronizes), kept outside the jitted body.
     """
     result, conflicts = _skipper(
         edges, tile_size, vector_rounds, with_conflicts, dispersed,
-        conflict_method,
+        conflict_method, resolve_spec(spec),
     )
     if verify:
         from repro.core.validate import check_matching
@@ -103,7 +110,7 @@ def skipper(
     jax.jit,
     static_argnames=(
         "tile_size", "vector_rounds", "with_conflicts", "dispersed",
-        "conflict_method",
+        "conflict_method", "spec",
     ),
 )
 def _skipper(
@@ -113,6 +120,7 @@ def _skipper(
     with_conflicts: bool = False,
     dispersed: bool = True,
     conflict_method: str = "auto",
+    spec: Optional[StateSpec] = None,
 ) -> Tuple[MatchResult, Optional[jax.Array]]:
     """The jitted body of :func:`skipper` (verification stays host-side)."""
     n = edges.num_vertices
@@ -127,7 +135,7 @@ def _skipper(
         ut = e.u.reshape(num_tiles, tile_size)
         vt = e.v.reshape(num_tiles, tile_size)
 
-    init_state = jnp.full((n,), ACC, STATE_DTYPE)
+    init_state = jnp.full((n,), ACC, resolve_spec(spec).at_rest_dtype)
 
     def tile_step(carry, uv):
         state, loads, stores, fallbacks = carry

@@ -1,8 +1,10 @@
 """Shared types for the matching core.
 
 Vertex states follow the paper (Alg. 1): ACC(0) accessible, RSVD(1) reserved,
-MCHD(2) matched. The state array is uint8 — the paper's "one byte per vertex"
-memory claim (§I, §IV) is preserved verbatim.
+MCHD(2) matched. The at-rest state array is uint8 — the paper's "one byte per
+vertex" memory claim (§I, §IV) preserved verbatim. Per-tier widths (VMEM,
+wire, counters) live in ``core/statespec.py``; ``STATE_DTYPE`` here is the
+default spec's at-rest dtype, kept as the legacy alias most callers use.
 """
 from __future__ import annotations
 
@@ -12,11 +14,13 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-ACC = jnp.uint8(0)
-RSVD = jnp.uint8(1)
-MCHD = jnp.uint8(2)
+from repro.core.statespec import DEFAULT as DEFAULT_STATE_SPEC
 
-STATE_DTYPE = jnp.uint8
+STATE_DTYPE = DEFAULT_STATE_SPEC.at_rest_dtype
+
+ACC = STATE_DTYPE(0)
+RSVD = STATE_DTYPE(1)
+MCHD = STATE_DTYPE(2)
 
 
 @jax.tree_util.register_pytree_node_class

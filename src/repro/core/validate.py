@@ -63,6 +63,29 @@ def check_matching(edges: EdgeList, match_mask: jax.Array) -> Dict[str, jax.Arra
     }
 
 
+@jax.jit
+def check_state_domain(state: jax.Array) -> Dict[str, jax.Array]:
+    """Domain check of a final vertex-state array, at ANY state width.
+
+    A finished run's state holds only ACC(0) or MCHD(2) — RSVD never
+    survives a tile, and anything else is corruption (``faults.CORRUPT``
+    lands here). Comparisons are against plain ints, so uint8 and int32
+    state (any ``core/statespec.StateSpec`` width) validate identically —
+    which is exactly what the spec-equivalence tests need to pin.
+
+    Returns ``{"clean": bool, "out_of_domain": int32, "rsvd_leaked":
+    int32}`` — ``clean`` iff both counts are zero.
+    """
+    ood = jnp.sum((state != 0) & (state != 1) & (state != 2),
+                  dtype=jnp.int32)
+    rsvd = jnp.sum(state == 1, dtype=jnp.int32)
+    return {
+        "clean": (ood == 0) & (rsvd == 0),
+        "out_of_domain": ood,
+        "rsvd_leaked": rsvd,
+    }
+
+
 def assert_matching(edges: EdgeList, match_mask: jax.Array, label: str = "") -> Dict[str, int]:
     out = {k: v.item() if hasattr(v, "item") else v for k, v in check_matching(edges, match_mask).items()}
     assert out["valid"], f"{label}: matching has endpoint collisions"

@@ -162,6 +162,28 @@ class WindowSchedule:
         used = self.num_windowed + int((self.boundary_index >= 0).sum())
         return (total - used) / max(1, total)
 
+    def vmem_state_bytes(self, spec=None) -> int:
+        """Bytes of the revolving per-step VMEM state block under ``spec``
+        (a ``core/statespec.StateSpec``; default the package spec): the
+        window tier carries one ``window``-cell block per grid step, the
+        boundary epilogue a two-window pair — this returns the LARGER of
+        the two, the figure the roofline and bench reports quote."""
+        from repro.core.statespec import resolve as resolve_spec
+
+        spec = resolve_spec(spec)
+        blocks = 2 if self.num_boundary_padded > 0 else 1
+        return blocks * self.window * spec.vmem_bytes
+
+    def wire_state_bytes(self, spec=None, num_devices: int = 1) -> int:
+        """Bytes of the distributed PHASE A state-assembly payload under
+        ``spec``: every device contributes its ``num_rows x window`` row
+        scatter to one O(V) combine (``distributed.locality_sharded_fn``),
+        at the spec's wire width."""
+        from repro.core.statespec import resolve as resolve_spec
+
+        spec = resolve_spec(spec)
+        return num_devices * self.num_rows * self.window * spec.wire_bytes
+
     def slot_to_stream(self) -> np.ndarray:
         """int32[num_rows, tiles_per_window, tile_size] — stream index of
         each schedule slot (-1 = padding)."""

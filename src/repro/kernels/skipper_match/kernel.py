@@ -27,8 +27,11 @@ kernel-specific:
 
   * state gather  : one_hot(u, W) @ state — a (T, W) x (W,) contraction; on
     TPU this hits the MXU instead of serializing into scalar loads. W is the
-    BlockSpec-controlled VMEM working set (W * 4 B for the state vector plus
-    the T x W one-hots).
+    BlockSpec-controlled VMEM working set (W * spec.vmem_bytes for the state
+    vector — 1 B/vertex under the default spec — plus the T x W one-hots).
+    The int32 one-hot operand widens the narrow state to i32 *inside* the
+    contraction (jax promotion), which is exactly where the MXU wants it;
+    the scatter's ``where`` narrows straight back to the state dtype.
   * JIT conflicts : the T x T triangular share matrix (VPU compares) — the
     vectorized analogue of "observe RSVD, wait a few cycles". Blocked edges
     retry in the next unrolled round, NOT in a later pass: single pass over
@@ -43,8 +46,10 @@ kernel-specific:
 Alignment: choose T a multiple of 8*128 lanes / pack (we default T=256) and
 W a multiple of 128 so the one-hot matmuls are MXU-aligned.
 
-States: ACC=0, MCHD=2 (int32 in VMEM; the at-rest array is uint8/vertex — the
-paper's 1 B/vertex claim — converted at the ops.py boundary).
+States: ACC=0, MCHD=2. Every width (VMEM state, matched/conflicts outputs)
+comes from the builder's ``StateSpec`` (``core/statespec.py``); the default
+spec keeps the paper's 1 B/vertex claim honest in VMEM too, the
+``legacy_i32`` spec compiles the historical all-i32 graph.
 """
 from __future__ import annotations
 
@@ -57,6 +62,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import engine
 from repro.core.engine import MCHD
+from repro.core.statespec import DEFAULT, StateSpec
 
 
 def _one_hot(idx: jax.Array, width: int) -> jax.Array:
@@ -123,14 +129,17 @@ def skipper_window_kernel(
     vector_rounds: int,
     window: int,
     fallback: bool,
+    spec: StateSpec = DEFAULT,
 ):
     """One grid step = one tile of T window-local edges (1-D grid, one window).
 
     u_ref/v_ref: int32[T] window-local endpoint ids (-1 = padding).
-    state_in_ref: int32[W] initial state (read at step 0 only).
-    state_ref: int32[W] in/out VMEM-resident state window (aliased).
-    matched_ref: int32[T] per-edge decision (1 = matched).
-    conflicts_ref: int32[T] rounds spent blocked (Table II instrumentation).
+    state_in_ref: spec.vmem[W] initial state (read at step 0 only).
+    state_ref: spec.vmem[W] in/out VMEM-resident state window (aliased).
+    matched_ref: spec.counter[T] per-edge decision (1 = matched).
+    conflicts_ref: spec.counter[T] rounds spent blocked (Table II
+    instrumentation; conflicts <= vector_rounds, so the narrow store is
+    exact — guarded by ``spec.validate_rounds`` at build time).
     """
     step = pl.program_id(0)
 
@@ -142,8 +151,8 @@ def skipper_window_kernel(
         u_ref[...], v_ref[...], state_ref,
         vector_rounds=vector_rounds, window=window, fallback=fallback,
     )
-    matched_ref[...] = matched.astype(jnp.int32)
-    conflicts_ref[...] = conflicts
+    matched_ref[...] = matched.astype(spec.counter_dtype)
+    conflicts_ref[...] = conflicts.astype(spec.counter_dtype)
 
 
 def skipper_pipeline_kernel(
@@ -157,10 +166,13 @@ def skipper_pipeline_kernel(
     vector_rounds: int,
     window: int,
     fallback: bool,
+    spec: StateSpec = DEFAULT,
 ):
     """One grid step = (window w, tile t). Blocks carry a leading length-1
     window axis; the state block is swapped per *window*, not per step, so it
-    is initialized when t == 0 and stays VMEM-resident for all tiles of w."""
+    is initialized when t == 0 and stays VMEM-resident for all tiles of w.
+    The block dtype is ``spec.vmem`` — window * spec.vmem_bytes resident
+    bytes per step."""
     t = pl.program_id(1)
 
     @pl.when(t == 0)
@@ -177,8 +189,8 @@ def skipper_pipeline_kernel(
         u_ref[0, :], v_ref[0, :], row,
         vector_rounds=vector_rounds, window=window, fallback=fallback,
     )
-    matched_ref[0, :] = matched.astype(jnp.int32)
-    conflicts_ref[0, :] = conflicts
+    matched_ref[0, :] = matched.astype(spec.counter_dtype)
+    conflicts_ref[0, :] = conflicts.astype(spec.counter_dtype)
 
 
 def skipper_boundary_kernel(
@@ -197,6 +209,7 @@ def skipper_boundary_kernel(
     vector_rounds: int,
     window: int,
     fallback: bool,
+    spec: StateSpec = DEFAULT,
 ):
     """One grid step = one tile of T global-tier edges, all sharing ONE
     (window-block of u, window-block of v) pair — the host schedule groups
@@ -220,8 +233,8 @@ def skipper_boundary_kernel(
     only the u row and leave the v half of the scratch untouched — store the
     u row last so it wins unconditionally.
 
-    VMEM per grid step: 2 * window * 4 B of state + the T x (2W) one-hots +
-    the T x T share matrix — O(window + tile^2), independent of V.
+    VMEM per grid step: 2 * window * spec.vmem_bytes of state + the T x (2W)
+    one-hots + the T x T share matrix — O(window + tile^2), independent of V.
     """
     i = pl.program_id(0)
     bu = blk_u_ref[i]
@@ -249,8 +262,8 @@ def skipper_boundary_kernel(
         u_ref[0, :], v_ref[0, :], cell,
         vector_rounds=vector_rounds, window=2 * window, fallback=fallback,
     )
-    matched_ref[0, :] = matched.astype(jnp.int32)
-    conflicts_ref[0, :] = conflicts
+    matched_ref[0, :] = matched.astype(spec.counter_dtype)
+    conflicts_ref[0, :] = conflicts.astype(spec.counter_dtype)
 
     # write-back: v row first, u row second (same-block pairs skip v and the
     # u row — the only row touched — lands last; see tile_pass_pair)
@@ -274,6 +287,7 @@ def build_boundary_matcher(
     vector_rounds: int = 1,
     fallback: bool = True,
     interpret: bool = True,
+    spec: StateSpec = DEFAULT,
 ):
     """Construct the scalar-prefetch pallas_call resolving the block-pair
     grouped global-tier stream.
@@ -281,15 +295,18 @@ def build_boundary_matcher(
     Call as ``fn(blk_u, blk_v, u, v, state)`` with blk_u/blk_v
     int32[num_tiles] pair block ids (scalar-prefetched), u/v
     int32[num_tiles, tile_size] OFFSET-LOCAL ids (-1 padding), and state
-    int32[num_windows, window] (aliased in/out — the caller's buffer is
-    donated). Returns (state, matched, conflicts) with matched/conflicts
-    shaped [num_tiles, tile_size]. Cached per static shape so repeated
-    driver calls reuse one pallas_call (and one trace)."""
+    spec.vmem[num_windows, window] (aliased in/out — the caller's buffer is
+    donated, so its dtype must match the spec). Returns (state, matched,
+    conflicts) with matched/conflicts shaped spec.counter[num_tiles,
+    tile_size]. Cached per static shape+spec so repeated driver calls reuse
+    one pallas_call (and one trace)."""
+    spec.validate_rounds(vector_rounds)
     kernel = functools.partial(
         skipper_boundary_kernel,
         vector_rounds=vector_rounds,
         window=window,
         fallback=fallback,
+        spec=spec,
     )
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -305,7 +322,7 @@ def build_boundary_matcher(
             pl.BlockSpec((1, tile_size), lambda i, bu, bv: (i, 0)),  # conflicts
         ],
         scratch_shapes=[
-            pltpu.VMEM((2, window), jnp.int32),  # the pair's two state rows
+            pltpu.VMEM((2, window), spec.vmem_dtype),  # the pair's state rows
             pltpu.SemaphoreType.DMA,
             pltpu.SemaphoreType.DMA,
         ],
@@ -314,9 +331,9 @@ def build_boundary_matcher(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((num_windows, window), jnp.int32),
-            jax.ShapeDtypeStruct((num_tiles, tile_size), jnp.int32),
-            jax.ShapeDtypeStruct((num_tiles, tile_size), jnp.int32),
+            jax.ShapeDtypeStruct((num_windows, window), spec.vmem_dtype),
+            jax.ShapeDtypeStruct((num_tiles, tile_size), spec.counter_dtype),
+            jax.ShapeDtypeStruct((num_tiles, tile_size), spec.counter_dtype),
         ],
         # state input (after the 2 prefetch scalars + u + v) -> state output
         input_output_aliases={4: 0},
@@ -332,14 +349,18 @@ def build_window_matcher(
     vector_rounds: int = 1,
     fallback: bool = True,
     interpret: bool = True,
+    spec: StateSpec = DEFAULT,
 ):
     """Construct the pallas_call for a (num_tiles x tile_size) edge stream
-    over a single ``window``-vertex state window."""
+    over a single ``window``-vertex state window (state in ``spec.vmem``,
+    matched/conflicts in ``spec.counter``)."""
+    spec.validate_rounds(vector_rounds)
     kernel = functools.partial(
         skipper_window_kernel,
         vector_rounds=vector_rounds,
         window=window,
         fallback=fallback,
+        spec=spec,
     )
     return pl.pallas_call(
         kernel,
@@ -355,9 +376,9 @@ def build_window_matcher(
             pl.BlockSpec((tile_size,), lambda i: (i,)),       # conflicts
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((window,), jnp.int32),
-            jax.ShapeDtypeStruct((num_tiles * tile_size,), jnp.int32),
-            jax.ShapeDtypeStruct((num_tiles * tile_size,), jnp.int32),
+            jax.ShapeDtypeStruct((window,), spec.vmem_dtype),
+            jax.ShapeDtypeStruct((num_tiles * tile_size,), spec.counter_dtype),
+            jax.ShapeDtypeStruct((num_tiles * tile_size,), spec.counter_dtype),
         ],
         interpret=interpret,
     )
@@ -372,21 +393,25 @@ def build_pipeline_matcher(
     vector_rounds: int = 1,
     fallback: bool = True,
     interpret: bool = True,
+    spec: StateSpec = DEFAULT,
 ):
     """Construct ONE pallas_call covering every (window, tile) of the graph's
     schedule.
 
     Inputs: u/v int32[num_windows, tiles_per_window * tile_size] window-local
-    ids, state0 int32[num_windows, window]. Outputs: (state, matched,
-    conflicts) with the same layouts. The state index map ``(w, t) -> (w, 0)``
-    ignores t: the revolving VMEM block is written back only when w changes —
-    one HBM round-trip per window, zero host round-trips.
+    ids, state0 spec.vmem[num_windows, window]. Outputs: (state, matched,
+    conflicts) — state in spec.vmem, matched/conflicts in spec.counter. The
+    state index map ``(w, t) -> (w, 0)`` ignores t: the revolving VMEM block
+    is written back only when w changes — one HBM round-trip per window, zero
+    host round-trips.
     """
+    spec.validate_rounds(vector_rounds)
     kernel = functools.partial(
         skipper_pipeline_kernel,
         vector_rounds=vector_rounds,
         window=window,
         fallback=fallback,
+        spec=spec,
     )
     slots = tiles_per_window * tile_size
     return pl.pallas_call(
@@ -403,9 +428,9 @@ def build_pipeline_matcher(
             pl.BlockSpec((1, tile_size), lambda w, t: (w, t)),   # conflicts
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((num_windows, window), jnp.int32),
-            jax.ShapeDtypeStruct((num_windows, slots), jnp.int32),
-            jax.ShapeDtypeStruct((num_windows, slots), jnp.int32),
+            jax.ShapeDtypeStruct((num_windows, window), spec.vmem_dtype),
+            jax.ShapeDtypeStruct((num_windows, slots), spec.counter_dtype),
+            jax.ShapeDtypeStruct((num_windows, slots), spec.counter_dtype),
         ],
         interpret=interpret,
     )

@@ -41,7 +41,8 @@ from repro.core.faults import (
     proposal_drop_mask,
     residual_replay,
 )
-from repro.core.types import STATE_DTYPE, Counters, MatchResult
+from repro.core.statespec import DEFAULT, StateSpec, resolve as resolve_spec
+from repro.core.types import Counters, MatchResult
 from repro.core.validate import check_matching
 from repro.graphs.types import EdgeList
 from repro.graphs.windows import WindowSchedule, build_window_schedule
@@ -72,10 +73,13 @@ def skipper_match_window(
     vector_rounds: int = 1,
     fallback: bool = True,
     interpret: Optional[bool] = None,
+    spec: Optional[StateSpec] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Match a window-local edge stream. u/v: int32[M] (padded to tile
-    multiple with -1), state0: int32[W]. Returns (state, matched, conflicts).
+    multiple with -1), state0: [W] (coerced to ``spec.vmem``). Returns
+    (state, matched, conflicts) in spec.vmem / spec.counter widths.
     """
+    spec = resolve_spec(spec)
     if interpret is None:
         interpret = _auto_interpret()
     m = u.shape[0]
@@ -86,9 +90,10 @@ def skipper_match_window(
     num_tiles = u.shape[0] // tile_size
     window = state0.shape[0]
     call = build_window_matcher(
-        num_tiles, tile_size, window, vector_rounds, fallback, interpret
+        num_tiles, tile_size, window, vector_rounds, fallback, interpret,
+        spec,
     )
-    state, matched, conflicts = call(u, v, state0)
+    state, matched, conflicts = call(u, v, state0.astype(spec.vmem_dtype))
     return state, matched[:m], conflicts[:m]
 
 
@@ -107,6 +112,7 @@ def _build_pipeline(
     backend: str,
     conflict_method: str,
     faults: Optional[FaultPlan] = None,
+    spec: StateSpec = DEFAULT,
 ):
     """One jitted compilation unit per static schedule shape: windowed kernel
     sweep over the dense rows + boundary epilogue + on-device counters.
@@ -140,6 +146,7 @@ def _build_pipeline(
             vector_rounds=vector_rounds,
             backend=backend,
             interpret=interpret,
+            spec=spec,
         )
         if faults is not None and faults.lose_shard is not None and num_rows:
             # FAULT: lost-shard analogue — one window row's tier
@@ -159,10 +166,11 @@ def _build_pipeline(
 
         # Rows hold only the dense windows: scatter them into the full
         # [num_windows, window] state (coalesced windows stay all-ACC — their
-        # edges are decided by the epilogue below). The xla twin switches to
-        # the uint8 at-rest encoding here (quarters the epilogue's HBM
-        # traffic); the Pallas boundary kernel keeps the VMEM int32.
-        state_dt = jnp.int32 if backend == "pallas" else jnp.uint8
+        # edges are decided by the epilogue below) at the spec's kernel-tier
+        # width: both backends carry spec.vmem here, so the Pallas boundary
+        # kernel's aliased ANY-memory state and the xla twin's scan carry
+        # are the same buffer layout (1 B/vertex under the default spec).
+        state_dt = spec.vmem_dtype
         flat = (
             jnp.zeros((num_windows, window), state_dt)
             .at[row_ids].set(state2.astype(state_dt))
@@ -198,7 +206,7 @@ def _build_pipeline(
             if backend == "pallas":
                 bcall = build_boundary_matcher(
                     nb_tiles, tile_size, num_windows, window,
-                    vector_rounds, True, interpret,
+                    vector_rounds, True, interpret, spec,
                 )
                 flat, bmt, bcf = bcall(blk_u, blk_v, but, bvt, flat)
             else:
@@ -208,7 +216,7 @@ def _build_pipeline(
                     rows, mt, cf, _fb = engine.tile_pass_pair(
                         rows, uloc, vloc, pbu, pbv, window=window,
                         vector_rounds=vector_rounds,
-                        conflict_method=conflict_method,
+                        conflict_method=conflict_method, spec=spec,
                     )
                     return rows, (mt, cf)
 
@@ -221,15 +229,18 @@ def _build_pipeline(
         # slot layout is [windowed ++ global-tier ++ one zero pad slot].
         # A gather, not a scatter — a |E|-index scatter costs ~100x more on
         # CPU XLA and the map is static per schedule.
+        cdt = spec.counter_dtype
         dec = [matched2.reshape(-1)]
         cfs = [conf2.reshape(-1)]
         if nb_tiles:
-            dec.append(bmt.reshape(-1).astype(jnp.int32))
-            cfs.append(bcf.reshape(-1))
-        dec.append(jnp.zeros((1,), jnp.int32))
-        cfs.append(jnp.zeros((1,), jnp.int32))
+            dec.append(bmt.reshape(-1).astype(cdt))
+            cfs.append(bcf.reshape(-1).astype(cdt))
+        dec.append(jnp.zeros((1,), cdt))
+        cfs.append(jnp.zeros((1,), cdt))
         mask = jnp.concatenate(dec)[src] > 0
-        conf = jnp.concatenate(cfs)[src]
+        # per-edge conflicts stay i32 at the public boundary (callers sum
+        # them into Counters); the narrow width is the O(E) buffer inside
+        conf = jnp.concatenate(cfs)[src].astype(jnp.int32)
 
         nmatch = jnp.sum(mask).astype(jnp.int32)
         nconf = jnp.sum(conf).astype(jnp.int32)
@@ -241,7 +252,7 @@ def _build_pipeline(
         )
         # back to ORIGINAL vertex ids: original vertex i lives at renumbered
         # slot perm[i] of the flattened state (perm = arange when unordered).
-        state_out = flat.reshape(n_flat)[perm].astype(STATE_DTYPE)
+        state_out = flat.reshape(n_flat)[perm].astype(spec.at_rest_dtype)
         return mask, state_out, conf, counters
 
     return jax.jit(pipeline)
@@ -262,6 +273,7 @@ def skipper_match(
     faults: Optional[FaultPlan] = None,
     on_fault: str = "raise",
     verify: bool = False,
+    spec: Optional[StateSpec] = None,
 ) -> Union[MatchResult, Tuple]:
     """Full-graph device-resident matcher: one traced pipeline for all
     windows plus the in-device boundary epilogue.
@@ -275,6 +287,12 @@ def skipper_match(
     ``conflict_method`` reaches the XLA twin's boundary-epilogue
     ``engine.tile_pass`` (the Pallas kernels force the share-matrix form —
     Mosaic has no sort/scatter); the choice never changes output.
+
+    ``spec`` (a frozen :class:`StateSpec`, ``None`` -> the uint8 default)
+    picks the vertex-state width of every tier — VMEM blocks, the boundary
+    kernel's ANY-memory state, the matched/conflicts buffers, the returned
+    at-rest state. ``StateSpec.legacy_i32()`` compiles the historical
+    all-i32 graph; matchings are bit-identical across specs (test-pinned).
 
     Failure handling (DESIGN.md §11): ``faults=`` threads a frozen
     :class:`FaultPlan` into the compiled pipeline (``None``, the default,
@@ -317,6 +335,7 @@ def skipper_match(
         )
     if interpret is None:
         interpret = _auto_interpret()
+    spec = resolve_spec(spec)
     fn = _build_pipeline(
         schedule.num_windows,
         schedule.num_rows,
@@ -331,6 +350,7 @@ def skipper_match(
         backend,
         conflict_method,
         faults,
+        spec,
     )
     perm = schedule.perm
     if perm is None:
@@ -353,6 +373,7 @@ def skipper_match(
         rmask, rstate, residual, recovered, corrupted = residual_replay(
             edges, result.match_mask, result.state,
             tile_size=schedule.tile_size, vector_rounds=vector_rounds,
+            spec=spec,
         )
         res_i, cor_i = (int(x) for x in jax.device_get((residual, corrupted)))
         result = MatchResult(match_mask=rmask, state=rstate, counters=counters)

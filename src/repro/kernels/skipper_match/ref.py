@@ -20,31 +20,39 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
+from repro.core.statespec import StateSpec, resolve as resolve_spec
 
 
-@partial(jax.jit, static_argnames=("vector_rounds", "fallback"))
+@partial(jax.jit, static_argnames=("vector_rounds", "fallback", "spec"))
 def ref_match_window(
     u_tiles: jax.Array,   # int32[num_tiles, T]
     v_tiles: jax.Array,   # int32[num_tiles, T]
-    state0: jax.Array,    # int32[W]
+    state0: jax.Array,    # spec.vmem[W]
     vector_rounds: int = 1,
     fallback: bool = True,
+    spec: StateSpec | None = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Returns (state, matched int32[num_tiles*T], conflicts int32[...])."""
+    """Returns (state, matched spec.counter[num_tiles*T], conflicts[...]).
+    ``state0``'s dtype is the caller's; matched/conflicts follow the spec
+    like ``build_window_matcher``'s outputs do."""
+    spec = resolve_spec(spec)
     w = state0.shape[0]
+    cdt = spec.counter_dtype
 
     def tile_step(state, uv):
         u, v = uv
         state, matched, conflicts, _fb = engine.tile_pass(
-            state, u, v, n=w, vector_rounds=vector_rounds, fallback=fallback
+            state, u, v, n=w, vector_rounds=vector_rounds, fallback=fallback,
+            spec=spec,
         )
-        return state, (matched.astype(jnp.int32), conflicts)
+        return state, (matched.astype(cdt), conflicts)
 
     state, (matched, conflicts) = jax.lax.scan(tile_step, state0, (u_tiles, v_tiles))
     return state, matched.reshape(-1), conflicts.reshape(-1)
 
 
-def make_ref_pipeline(window: int, vector_rounds: int = 1):
+def make_ref_pipeline(window: int, vector_rounds: int = 1,
+                      spec: StateSpec | None = None):
     """Build the jnp twin of ``build_pipeline_matcher`` for a fixed window
     size: every window starts from all-ACC state and runs its tiles in order.
 
@@ -59,16 +67,19 @@ def make_ref_pipeline(window: int, vector_rounds: int = 1):
     path owns the parallel hardware). A scan-of-scans over (rows, tiles)
     is equivalent but measured ~20% slower (per-row output stacking).
 
-    The state is uint8 end-to-end — the paper's 1 B/vertex at-rest encoding;
-    the engine compares against plain ints so the dtype is free, and it
-    quarters state traffic vs the kernel's MXU-mandated int32 (outputs are
-    bit-equal either way).
+    State and counter widths come from the spec (``core/statespec.py``):
+    the default carries uint8 end-to-end — the paper's 1 B/vertex encoding —
+    and the engine compares against plain ints so any width computes the
+    same values (bit-equal across specs, test-pinned). The twin and the
+    Pallas kernel share the spec, so their output *dtypes* match too.
 
     The returned callable maps (u_tiles, v_tiles)
     int32[num_rows, tiles_per_window, T] (window-local ids) to
-    (state uint8[num_rows, window], matched int32[num_rows, tpw*T],
-    conflicts int32[...]).
+    (state spec.vmem[num_rows, window], matched spec.counter[num_rows,
+    tpw*T], conflicts spec.counter[...]).
     """
+    spec = resolve_spec(spec)
+    cdt = spec.counter_dtype
 
     def run(u3, v3):
         num_rows, tpw, t = u3.shape
@@ -81,11 +92,11 @@ def make_ref_pipeline(window: int, vector_rounds: int = 1):
             u, v, fr = uvf
             state = jnp.where(fr, jnp.zeros_like(state), state)
             state, matched, conflicts, _fb = engine.tile_pass(
-                state, u, v, n=window, vector_rounds=vector_rounds
+                state, u, v, n=window, vector_rounds=vector_rounds, spec=spec
             )
-            return state, (state, matched.astype(jnp.int32), conflicts)
+            return state, (state, matched.astype(cdt), conflicts)
 
-        state0 = jnp.zeros((window,), jnp.uint8)
+        state0 = jnp.zeros((window,), spec.vmem_dtype)
         _, (states, matched, conflicts) = jax.lax.scan(
             tile_step, state0, (uf, vf, fresh)
         )

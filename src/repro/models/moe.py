@@ -152,8 +152,8 @@ def moe_mlp(x: jax.Array, p: Dict[str, Any], cfg: ModelConfig) -> jax.Array:
         slot_sorted = (
             jnp.arange(g * m_g, dtype=jnp.int32) - starts[sorted_key].astype(jnp.int32)
         )
-        flat = jnp.zeros((g * m_g,), jnp.int32).at[order].set(slot_sorted)
-        return flat.reshape(g, m_g)
+        slot_of = jnp.zeros((g * m_g,), jnp.int32).at[order].set(slot_sorted)
+        return slot_of.reshape(g, m_g)
 
     slots = jax.lax.stop_gradient(slots_flat(exp_ids, accept))   # [G, M_g]
     ok = accept & (slots < cap) & (weights > 0)

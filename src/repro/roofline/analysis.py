@@ -180,6 +180,36 @@ def _cpu_convert_artifact_bytes(text: str) -> int:
     return total
 
 
+def state_traffic_bytes(counters, spec=None) -> Dict[str, float]:
+    """State-array traffic of a matcher run in BYTES under a state spec.
+
+    ``core/types.Counters`` counts state *accesses* (the paper's PAPI
+    convention — loads + stores of ``state[]``); the roofline wants bytes,
+    and the byte-per-access factor is exactly what ``core/statespec``
+    decides: the hot loop touches state at the spec's VMEM width, so the
+    uint8 default moves 4x fewer state bytes than the legacy int32 graph
+    for the same access counts. Edge-topology reads stay int32 (2 endpoint
+    ids, 8 B per edge read) at every spec.
+
+    Returns ``{"state_bytes", "edge_bytes", "total_bytes", "memory_s"}``
+    where ``memory_s`` is the HBM term these bytes contribute at the
+    modeled bandwidth.
+    """
+    from repro.core.statespec import resolve as resolve_spec
+
+    spec = resolve_spec(spec)
+    accesses = int(counters.state_loads) + int(counters.state_stores)
+    state_b = float(accesses * spec.vmem_bytes)
+    edge_b = float(int(counters.edge_reads) * 8)  # 2 x i32 endpoints
+    total = state_b + edge_b
+    return {
+        "state_bytes": state_b,
+        "edge_bytes": edge_b,
+        "total_bytes": total,
+        "memory_s": total / HBM_BW,
+    }
+
+
 def model_flops(cfg, shape, n_params_active: int, n_params_total: int) -> float:
     """MODEL_FLOPS = 6*N*D for training, 2*N*tokens for inference."""
     if shape.kind == "train":

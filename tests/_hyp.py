@@ -23,3 +23,4 @@ except ImportError:  # pragma: no cover - exercised in minimal containers
     class st:  # noqa: N801 - strategy stubs, evaluated at decoration only
         _inert = staticmethod(lambda *a, **k: None)
         integers = floats = booleans = sampled_from = lists = text = _inert
+        tuples = _inert

@@ -1,0 +1,322 @@
+"""State-width policy (DESIGN.md §12, ``core/statespec.py``).
+
+The refactor's contract has two halves and this module pins both:
+
+1. **Width never changes decisions.** The engine compares state against
+   plain ints and widens to i32 inside the one-hot gathers, so the uint8
+   default and ``StateSpec.legacy_i32()`` (the exact pre-refactor i32
+   graph) must produce bit-identical matchings through every entry point:
+   ``skipper_match`` (both backends), ``skipper``, the distributed
+   matcher (both schedules, D=1 in-process and forced D=4 in a
+   subprocess, clean and under chaos), and ``bmatch_assign``.
+
+2. **Narrowing is guarded, not silent.** ``validate_rounds`` refuses a
+   conflict counter that could wrap; ``validate_capacity`` gates the
+   capacitated used-count width; summing callers keep i32 accumulators
+   (``StateSpec.accum`` is pinned to int32).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import assert_matching
+from repro.core.bipartite import bmatch_assign
+from repro.core.distributed import distributed_skipper
+from repro.core.faults import FaultPlan
+from repro.core.statespec import DEFAULT, StateSpec, resolve
+from repro.core.validate import check_state_domain
+from repro.graphs import erdos_renyi_graph, grid_graph, rmat_graph
+from repro.graphs.types import EdgeList
+from repro.graphs.windows import build_window_schedule
+from repro.kernels.skipper_match import skipper_match
+from test_distributed import _run_subprocess
+
+SPECS = {
+    "u8": StateSpec.u8(),
+    "legacy_i32": StateSpec.legacy_i32(),
+}
+
+
+# ---------------------------------------------------------------------------
+# spec object: fields, guards, hashability
+# ---------------------------------------------------------------------------
+
+def test_default_is_single_byte_everywhere():
+    assert DEFAULT == StateSpec.u8()
+    assert (DEFAULT.at_rest_bytes, DEFAULT.vmem_bytes, DEFAULT.wire_bytes,
+            DEFAULT.counter_bytes) == (1, 1, 1, 1)
+    assert DEFAULT.combine == "max"
+    # legacy keeps the paper's at-rest byte but i32 everywhere hot
+    leg = StateSpec.legacy_i32()
+    assert leg.at_rest_bytes == 1
+    assert (leg.vmem_bytes, leg.wire_bytes, leg.counter_bytes) == (4, 4, 4)
+    assert leg.combine == "psum"
+
+
+def test_spec_is_frozen_and_cache_key_safe():
+    s = StateSpec()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s.vmem = "int32"
+    assert hash(StateSpec()) == hash(StateSpec.u8())
+    assert StateSpec() != StateSpec.legacy_i32()
+    assert len({StateSpec(), StateSpec.u8(), StateSpec.legacy_i32()}) == 2
+
+
+def test_resolve_none_is_default():
+    assert resolve(None) is DEFAULT
+    leg = StateSpec.legacy_i32()
+    assert resolve(leg) is leg
+
+
+def test_invalid_fields_raise():
+    with pytest.raises(ValueError, match="at_rest"):
+        StateSpec(at_rest="float32")
+    with pytest.raises(ValueError, match="combine"):
+        StateSpec(combine="mean")
+    with pytest.raises(ValueError, match="accum"):
+        StateSpec(accum="uint8")
+
+
+def test_validate_rounds_guard():
+    StateSpec().validate_rounds(255)  # fits exactly
+    with pytest.raises(ValueError, match="vector_rounds=300"):
+        StateSpec().validate_rounds(300)
+    StateSpec.legacy_i32().validate_rounds(300)  # i32 counter: fine
+
+
+def test_validate_rounds_guard_fires_through_the_matcher():
+    """An unholdable conflict counter must refuse to build, not wrap."""
+    g = grid_graph(8, 8)
+    with pytest.raises(ValueError, match="vector_rounds"):
+        skipper_match(g, window=64, tile_size=64, backend="xla",
+                      vector_rounds=300)
+    # the wide counter accepts the same request
+    r = skipper_match(g, window=64, tile_size=64, backend="xla",
+                      vector_rounds=300, spec=StateSpec.legacy_i32())
+    assert_matching(g, r.match_mask, "rounds300/legacy")
+
+
+def test_validate_capacity():
+    assert StateSpec().validate_capacity(255)
+    assert not StateSpec().validate_capacity(256)
+    assert StateSpec.legacy_i32().validate_capacity(255)
+
+
+# ---------------------------------------------------------------------------
+# equivalence matrix: single-device matchers
+# ---------------------------------------------------------------------------
+
+GRAPHS = [
+    ("grid", lambda: grid_graph(16, 16)),
+    ("rmat", lambda: rmat_graph(10, 8, seed=3)),
+    ("er", lambda: erdos_renyi_graph(600, 2400, seed=7)),
+]
+
+
+@pytest.mark.parametrize("gname,gf", GRAPHS)
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_skipper_match_bit_identical_across_specs(gname, gf, backend):
+    g = gf()
+    kw = dict(window=256, tile_size=256, reorder="degree", backend=backend)
+    if backend == "pallas":
+        kw["interpret"] = True
+    base = skipper_match(g, **kw)
+    for sname, spec in SPECS.items():
+        r = skipper_match(g, spec=spec, **kw)
+        assert bool(jnp.all(r.match_mask == base.match_mask)), (
+            f"{gname}/{backend}/{sname}")
+        # at-rest state is 1 B/vertex under BOTH blessed specs
+        assert r.state.dtype == jnp.uint8
+        assert bool(jnp.all(r.state == base.state))
+        assert bool(check_state_domain(r.state)["clean"])
+    assert_matching(g, base.match_mask, f"{gname}/{backend}")
+
+
+def test_skipper_raw_stream_spec_equivalence():
+    from repro.core.skipper import skipper
+
+    g = rmat_graph(10, 8, seed=5)
+    base, _ = skipper(g, tile_size=256)
+    for sname, spec in SPECS.items():
+        r, _ = skipper(g, tile_size=256, spec=spec)
+        assert bool(jnp.all(r.match_mask == base.match_mask)), sname
+        assert r.state.dtype == jnp.uint8  # at_rest in both blessed specs
+    assert_matching(g, base.match_mask, "skipper/raw")
+
+
+@given(
+    edges=st.lists(
+        st.tuples(st.integers(0, 49), st.integers(0, 49)),
+        min_size=0, max_size=120,
+    ),
+    rounds=st.integers(1, 3),
+)
+@settings(max_examples=25, deadline=None)
+def test_hypothesis_any_stream_spec_invariant(edges, rounds):
+    """Random (self-loop/dup/isolated-heavy) streams: the u8 and legacy
+    graphs decide every edge identically, and the result is a valid
+    maximal matching."""
+    n = 50
+    u = np.array([e[0] for e in edges] + [-1], np.int32)
+    v = np.array([e[1] for e in edges] + [-1], np.int32)
+    g = EdgeList(u=u, v=v, num_vertices=n)
+    masks = {}
+    for sname, spec in SPECS.items():
+        r = skipper_match(g, window=64, tile_size=64, backend="xla",
+                          vector_rounds=rounds, spec=spec)
+        masks[sname] = np.asarray(r.match_mask)
+    assert (masks["u8"] == masks["legacy_i32"]).all()
+    assert_matching(g, jnp.asarray(masks["u8"]), "hyp")
+
+
+# ---------------------------------------------------------------------------
+# distributed: D=1 in-process, chaos ladder, D=4 subprocess
+# ---------------------------------------------------------------------------
+
+def test_distributed_both_schedules_spec_equivalence():
+    g = grid_graph(20, 20)
+    for kw in (dict(block_size=256),                       # dispersed
+               dict(block_size=256, reorder="degree", window=256)):
+        base, bstats = distributed_skipper(g, **kw)
+        leg, lstats = distributed_skipper(
+            g, spec=StateSpec.legacy_i32(), **kw)
+        assert bool(jnp.all(base.match_mask == leg.match_mask))
+        assert base.state.dtype == jnp.uint8
+        assert leg.state.dtype == jnp.uint8
+        assert_matching(g, base.match_mask, f"dist/{sorted(kw)}")
+        if "window" in kw:
+            # PHASE A payload is counted at the wire width: the sharded
+            # legacy run gathers exactly 3 more bytes per state cell
+            d_bytes = int(lstats.gathered_bytes) - int(bstats.gathered_bytes)
+            assert d_bytes > 0 and d_bytes % 3 == 0
+
+
+def test_diststats_gathered_ints_alias_deprecated():
+    g = grid_graph(12, 12)
+    _, stats = distributed_skipper(g, block_size=256)
+    with pytest.warns(DeprecationWarning, match="gathered_bytes"):
+        gi = int(stats.gathered_ints)
+    assert gi == int(stats.gathered_bytes) // 4
+
+
+def test_chaos_recover_spec_equivalence():
+    """The recovery ladder under injected faults lands on the same
+    valid+maximal matching at either width (same seeded victims, same
+    mask-anchored replay)."""
+    g = erdos_renyi_graph(800, 3200, seed=11)
+    plan = FaultPlan(seed=5, drop_proposals=0.2, corrupt_state=0.01)
+    masks = {}
+    for sname, spec in SPECS.items():
+        r, stats = distributed_skipper(
+            g, block_size=256, reorder="degree", window=256,
+            faults=plan, on_fault="recover", verify=True, spec=spec,
+        )
+        masks[sname] = np.asarray(r.match_mask)
+        assert bool(check_state_domain(r.state)["clean"])
+    assert (masks["u8"] == masks["legacy_i32"]).all()
+
+
+_SUBPROCESS_MATRIX = r"""
+import jax, numpy as np
+import jax.numpy as jnp
+assert jax.device_count() == 4
+from repro.core import assert_matching
+from repro.core.distributed import distributed_skipper
+from repro.core.statespec import StateSpec
+from repro.graphs import erdos_renyi_graph
+
+g = erdos_renyi_graph(1200, 4800, seed=13)
+for kw in (dict(block_size=256),
+           dict(block_size=256, reorder="degree", window=256)):
+    base, bs = distributed_skipper(g, **kw)
+    leg, ls = distributed_skipper(g, spec=StateSpec.legacy_i32(), **kw)
+    assert bool(jnp.all(base.match_mask == leg.match_mask)), kw
+    assert base.state.dtype == jnp.uint8
+    assert_matching(g, base.match_mask, f"d4/{sorted(kw)}")
+    if "window" in kw:
+        assert int(ls.gathered_bytes) > int(bs.gathered_bytes)
+print("SUBPROCESS_OK")
+"""
+
+
+def test_spec_equivalence_forced_4_devices():
+    """u8 max-combine == legacy i32 psum across a real 4-way shard_map:
+    the disjoint-rows argument for the width-honest combine, executed."""
+    _run_subprocess(_SUBPROCESS_MATRIX, num_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# capacitated adapter
+# ---------------------------------------------------------------------------
+
+def test_bmatch_spec_equivalence():
+    rng = np.random.default_rng(3)
+    m, nt, ne = 4096, 256, 32
+    tok = rng.integers(0, nt, m).astype(np.int32)
+    exp = rng.integers(0, ne, m).astype(np.int32)
+    tok[rng.random(m) < 0.05] = -1  # invalid candidates
+    kw = dict(num_tokens=nt, num_experts=ne, token_budget=2,
+              expert_capacity=24, tile_size=512)
+    base, bstats = bmatch_assign(
+        jnp.asarray(tok), jnp.asarray(exp), with_stats=True, **kw)
+    for sname, spec in SPECS.items():
+        acc, stats = bmatch_assign(
+            jnp.asarray(tok), jnp.asarray(exp), with_stats=True,
+            spec=spec, **kw)
+        assert bool(jnp.all(acc == base.astype(acc.dtype))), sname
+        assert int(stats["conflicts"]) == int(bstats["conflicts"])
+
+
+def test_bmatch_wide_capacity_falls_back_to_accum():
+    """expert_capacity > 255 cannot live in a u8 used count — the adapter
+    must widen, not wrap: with 300 slots on one expert, all 300 accepted."""
+    m = 512
+    tok = jnp.arange(m, dtype=jnp.int32)
+    exp = jnp.zeros((m,), jnp.int32)
+    acc = bmatch_assign(
+        tok, exp, num_tokens=m, num_experts=1, token_budget=1,
+        expert_capacity=300, tile_size=512,
+    )
+    assert int(jnp.sum(acc)) == 300
+
+
+# ---------------------------------------------------------------------------
+# validators / instrumentation
+# ---------------------------------------------------------------------------
+
+def test_check_state_domain_any_width():
+    for dt in (jnp.uint8, jnp.int32):
+        clean = jnp.asarray([0, 2, 0, 2], dt)
+        out = check_state_domain(clean)
+        assert bool(out["clean"])
+        dirty = jnp.asarray([0, 7, 1, 2], dt)
+        out = check_state_domain(dirty)
+        assert not bool(out["clean"])
+        assert int(out["out_of_domain"]) == 1
+        assert int(out["rsvd_leaked"]) == 1
+
+
+def test_roofline_state_traffic_scales_with_spec():
+    from repro.roofline.analysis import state_traffic_bytes
+
+    g = grid_graph(16, 16)
+    r = skipper_match(g, window=256, tile_size=256, backend="xla")
+    u8 = state_traffic_bytes(r.counters)
+    i32 = state_traffic_bytes(r.counters, StateSpec.legacy_i32())
+    assert u8["state_bytes"] * 4 == i32["state_bytes"]
+    assert u8["edge_bytes"] == i32["edge_bytes"]  # topology stays i32
+    assert u8["total_bytes"] < i32["total_bytes"]
+
+
+def test_window_schedule_byte_helpers():
+    g = rmat_graph(10, 8, seed=3)
+    s = build_window_schedule(g, window=256, tile_size=256, reorder="degree")
+    leg = StateSpec.legacy_i32()
+    assert s.vmem_state_bytes() * 4 == s.vmem_state_bytes(leg)
+    assert s.wire_state_bytes(num_devices=4) * 4 == s.wire_state_bytes(
+        leg, num_devices=4)
+    assert s.wire_state_bytes(num_devices=4) == (
+        4 * s.num_rows * s.window * 1)
