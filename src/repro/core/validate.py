@@ -86,8 +86,44 @@ def check_state_domain(state: jax.Array) -> Dict[str, jax.Array]:
     }
 
 
+def _first_offender(edges: EdgeList, match_mask) -> str:
+    """Host-side diagnosis for a failed check: the FIRST stream edge that
+    breaks validity (a selected edge hitting an endpoint an earlier
+    selected edge already covered) or, failing that, maximality (a valid
+    edge left unmatched with both endpoints uncovered). Runs only on the
+    failure path — plain numpy, synchronizes."""
+    import numpy as np
+
+    e = edges.canonical()
+    u = np.asarray(e.u, np.int64)
+    v = np.asarray(e.v, np.int64)
+    n = e.num_vertices
+    mask = np.asarray(match_mask, bool)
+    valid = (u != v) & (u >= 0) & (v < n)
+    covered = np.zeros(n, bool)
+    for i in np.flatnonzero(mask & valid):
+        if covered[u[i]] or covered[v[i]]:
+            return (f"first offending edge ({u[i]}, {v[i]}) at stream "
+                    f"index {i}: selected but an endpoint is already "
+                    "covered by an earlier selected edge")
+        covered[u[i]] = covered[v[i]] = True
+    free = valid & ~mask & ~covered[np.clip(u, 0, n - 1)] \
+        & ~covered[np.clip(v, 0, n - 1)]
+    if free.any():
+        i = int(np.flatnonzero(free)[0])
+        return (f"first offending edge ({u[i]}, {v[i]}) at stream index "
+                f"{i}: unmatched with both endpoints uncovered")
+    return "no offending edge found (mask/graph disagree with the check?)"
+
+
 def assert_matching(edges: EdgeList, match_mask: jax.Array, label: str = "") -> Dict[str, int]:
     out = {k: v.item() if hasattr(v, "item") else v for k, v in check_matching(edges, match_mask).items()}
-    assert out["valid"], f"{label}: matching has endpoint collisions"
-    assert out["maximal"], f"{label}: matching is not maximal"
+    assert out["valid"], (
+        f"{label}: matching has endpoint collisions — "
+        + _first_offender(edges, match_mask)
+    )
+    assert out["maximal"], (
+        f"{label}: matching is not maximal — "
+        + _first_offender(edges, match_mask)
+    )
     return out

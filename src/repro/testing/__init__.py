@@ -1,0 +1,69 @@
+"""APRAM interleaving conformance subsystem (DESIGN.md §13).
+
+Skipper's headline claim is schedule-independence: the merged
+reserve+commit step is safe in the asynchronous PRAM model — ANY
+interleaving of per-edge events over the single-byte vertex cells ends in
+a valid maximal matching after one pass. The production matchers in this
+repo only ever execute the one deterministic schedule JAX traces, so the
+property the paper is *about* needs its own ground-truth model:
+
+* :mod:`repro.testing.apram` — a step-level numpy model of the protocol
+  where each edge's reserve+commit is one atomic event, with per-step
+  invariant checks (state domain, no double-match, monotone commit) and
+  quiescence checks (validity + maximality via ``core/validate``), plus
+  seeded protocol *mutations* (commit-before-reserve and friends) that
+  the harness must catch.
+* :mod:`repro.testing.scheduler` — the adversarial scheduler zoo:
+  seeded-random, round-robin thread interleavings, hub-contention
+  worst case, and exhaustive enumeration of every interleaving for tiny
+  instances.
+* :mod:`repro.testing.oracle` — differential conformance: pin any
+  production matching as ONE reachable APRAM trace of the same edge
+  stream (the matched-first witness schedule), executed through the
+  checked model rather than trusted as a theorem.
+
+This package is test infrastructure: it depends on numpy and (for the
+quiescence validity check and entry-point pins) the production ``repro``
+modules, never the other way around.
+"""
+from repro.testing.apram import (
+    ApramResult,
+    ApramViolation,
+    MUTATIONS,
+    run_schedule,
+)
+from repro.testing.oracle import (
+    ConformanceError,
+    bipartite_stream,
+    pin_entry_points,
+    pin_trace,
+    witness_schedule,
+)
+from repro.testing.scheduler import (
+    MAX_EXHAUSTIVE_EVENTS,
+    exhaustive_schedules,
+    hub_contention,
+    random_schedule,
+    round_robin,
+    stream_order,
+    sweep,
+)
+
+__all__ = [
+    "ApramResult",
+    "ApramViolation",
+    "MUTATIONS",
+    "run_schedule",
+    "ConformanceError",
+    "bipartite_stream",
+    "pin_entry_points",
+    "pin_trace",
+    "witness_schedule",
+    "MAX_EXHAUSTIVE_EVENTS",
+    "exhaustive_schedules",
+    "hub_contention",
+    "random_schedule",
+    "round_robin",
+    "stream_order",
+    "sweep",
+]

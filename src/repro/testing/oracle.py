@@ -1,0 +1,189 @@
+"""Differential conformance: pin production matchings as APRAM traces.
+
+The bridge theorem (DESIGN.md §13): a mask over a canonical edge stream is
+a *reachable trace* of the APRAM reservation protocol **iff** it is a
+valid maximal matching of that stream — and the witness is executable.
+:func:`witness_schedule` orders the matched events first (in stream
+order), then everything else; running that schedule through the *checked*
+step-level model must reproduce the mask decision-for-decision:
+
+* if the mask double-books a vertex, the second adjacent "matched" event
+  finds a non-ACC cell and dies → mismatch (and the model's own
+  ``no_double_match`` check fires);
+* if the mask is non-maximal, some free edge with both endpoints
+  uncovered comes up in the tail and the model commits it → mismatch.
+
+So :func:`pin_trace` doesn't *trust* the theorem — it executes the
+witness under full per-step invariant checking and compares. Every
+production entry point (``skipper``, ``skipper_match``,
+``distributed_skipper``, ``bmatch_assign`` via :func:`bipartite_stream`,
+the chaos-recover ladder) is pinned this way by the conformance suite;
+:func:`pin_entry_points` bundles the single-process matrix.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.testing.apram import ApramResult, run_schedule
+
+
+class ConformanceError(AssertionError):
+    """A production mask is not a reachable APRAM trace.
+
+    ``first_mismatch`` is the first stream index where the model's
+    decision differs from the production mask (-1 when the failure came
+    from the model's own invariant machinery instead)."""
+
+    def __init__(self, message: str, *, first_mismatch: int = -1):
+        super().__init__(message)
+        self.first_mismatch = first_mismatch
+
+
+def witness_schedule(edges, mask) -> np.ndarray:
+    """The executable witness: matched events first (stream order), then
+    the rest (stream order). For the true protocol this is the schedule
+    under which a valid maximal mask reproduces itself exactly."""
+    mask = np.asarray(mask, bool)
+    idx = np.arange(mask.shape[0], dtype=np.int64)
+    return np.concatenate([idx[mask], idx[~mask]])
+
+
+def pin_trace(edges, mask, *, label: str = "") -> ApramResult:
+    """Assert ``mask`` is a reachable APRAM trace of ``edges``.
+
+    Runs the matched-first witness schedule through the fully-checked
+    model (``strict=True`` — any protocol invariant failing raises
+    :class:`~repro.testing.apram.ApramViolation` from underneath) and then
+    requires the model's decisions to equal ``mask`` bit for bit.
+
+    Args:
+        edges: ``EdgeList`` or ``(u, v, num_vertices)`` tuple — the SAME
+            stream (order included) the production matcher consumed.
+        mask: bool[m] production match mask.
+        label: prefixed to failure messages (name the entry point).
+
+    Returns:
+        The witness :class:`~repro.testing.apram.ApramResult`.
+    """
+    mask = np.asarray(mask, bool)
+    result = run_schedule(edges, witness_schedule(edges, mask), strict=True)
+    if not np.array_equal(result.matched, mask):
+        k = int(np.flatnonzero(result.matched != mask)[0])
+        who = f"{label}: " if label else ""
+        raise ConformanceError(
+            f"{who}mask is not a reachable APRAM trace: first divergence "
+            f"at stream index {k} — edge ({result.u[k]}, {result.v[k]}) is "
+            f"{'matched' if mask[k] else 'unmatched'} in the production "
+            f"mask but the witness schedule "
+            f"{'matched' if result.matched[k] else 'killed'} it "
+            f"({'mask double-books a vertex' if mask[k] else 'mask is not maximal'})",
+            first_mismatch=k,
+        )
+    return result
+
+
+def bipartite_stream(
+    token_ids, expert_ids, *, num_tokens: int, num_experts: int
+) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Map a b-matching candidate stream to a plain graph stream.
+
+    At ``token_budget=1`` / ``expert_capacity=1`` the capacitated router
+    IS unit matching on the bipartite graph with tokens at ids
+    ``[0, num_tokens)`` and experts at ``num_tokens + expert_id`` — so
+    ``bmatch_assign``'s accept mask can be pinned with :func:`pin_trace`
+    on the stream this returns. Invalid candidates (``token_id < 0``)
+    map to ``u = v = -1`` (invalid under the model's predicate)."""
+    tok = np.asarray(token_ids, np.int64)
+    exp = np.asarray(expert_ids, np.int64)
+    bad = tok < 0
+    u = np.where(bad, -1, tok)
+    v = np.where(bad, -1, num_tokens + exp)
+    return u, v, int(num_tokens) + int(num_experts)
+
+
+def pin_entry_points(
+    edges,
+    *,
+    specs: Optional[Sequence] = None,
+    window: int = 64,
+    tile_size: int = 32,
+    include_pallas: bool = True,
+    include_distributed: bool = True,
+    include_chaos: bool = True,
+) -> Dict[str, ApramResult]:
+    """Pin the single-process production matrix on one edge list.
+
+    Runs each entry point at every state width in ``specs`` (default:
+    ``StateSpec.u8()`` and ``StateSpec.legacy_i32()``) and
+    :func:`pin_trace`-s its mask. Forced multi-device
+    ``distributed_skipper`` lives in the subprocess tests, not here.
+
+    Returns ``{"<entry>@<spec>": ApramResult}``; raises
+    :class:`ConformanceError` / ``ApramViolation`` on the first failure.
+    """
+    from repro.core.distributed import distributed_skipper
+    from repro.core.faults import FaultPlan
+    from repro.core.skipper import skipper
+    from repro.core.statespec import StateSpec
+    from repro.kernels.skipper_match.ops import skipper_match
+
+    if specs is None:
+        specs = (StateSpec.u8(), StateSpec.legacy_i32())
+
+    def _tag(spec):
+        if spec == StateSpec.u8():
+            return "u8"
+        if spec == StateSpec.legacy_i32():
+            return "legacy_i32"
+        return f"{spec.vmem}-{spec.combine}"
+
+    out: Dict[str, ApramResult] = {}
+    for spec in specs:
+        tag = _tag(spec)
+
+        res, _ = skipper(edges, tile_size=tile_size, spec=spec)
+        out[f"skipper@{tag}"] = pin_trace(
+            edges, np.asarray(res.match_mask), label=f"skipper@{tag}"
+        )
+
+        res = skipper_match(
+            edges, window=window, tile_size=tile_size, backend="xla",
+            spec=spec,
+        )
+        out[f"skipper_match_xla@{tag}"] = pin_trace(
+            edges, np.asarray(res.match_mask),
+            label=f"skipper_match_xla@{tag}",
+        )
+
+        if include_pallas:
+            res = skipper_match(
+                edges, window=window, tile_size=tile_size,
+                backend="pallas", interpret=True, spec=spec,
+            )
+            out[f"skipper_match_pallas@{tag}"] = pin_trace(
+                edges, np.asarray(res.match_mask),
+                label=f"skipper_match_pallas@{tag}",
+            )
+
+        if include_distributed:
+            res, _stats = distributed_skipper(
+                edges, block_size=tile_size, tile_size=tile_size, spec=spec
+            )
+            out[f"distributed@{tag}"] = pin_trace(
+                edges, np.asarray(res.match_mask),
+                label=f"distributed@{tag}",
+            )
+
+        if include_chaos:
+            plan = FaultPlan(seed=7, drop_proposals=0.25, corrupt_state=0.05)
+            res, _report = skipper_match(
+                edges, window=window, tile_size=tile_size, backend="xla",
+                faults=plan, on_fault="recover", spec=spec,
+            )
+            out[f"chaos_recover@{tag}"] = pin_trace(
+                edges, np.asarray(res.match_mask),
+                label=f"chaos_recover@{tag}",
+            )
+    return out

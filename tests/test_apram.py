@@ -1,0 +1,323 @@
+"""APRAM interleaving conformance (ISSUE 9 tentpole; DESIGN.md §13).
+
+Four layers, each feeding the next:
+
+1. **Model soundness** — the step-level model (``repro.testing.apram``)
+   enforces its own invariants: every seeded protocol mutation is caught
+   by a per-step check on contended schedules, malformed schedules are
+   rejected, and non-strict mode records instead of raising.
+2. **Schedule-independence, exhaustively** — for tiny instances (V <= 8)
+   EVERY interleaving of the atomic events ends in a valid maximal
+   matching (the paper's APRAM safety claim, proved by enumeration at
+   small scale), and the zoo of adversarial schedulers covers larger
+   instances.
+3. **Differential conformance** — every production entry point's mask is
+   pinned as ONE reachable APRAM trace of the same edge stream
+   (``oracle.pin_trace`` executes the matched-first witness through the
+   checked model), at both ``StateSpec.u8()`` and ``legacy_i32()``.
+   Forced-D=4 ``distributed_skipper`` runs in a subprocess.
+4. **Fuzz corpus** — the checked-in regression corpus
+   (``tests/fuzz_corpus/``) replays clean, and the fuzz CLI's mutation
+   canary demonstrably fails (the property the CI job relies on).
+"""
+import json
+import math
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from strategies import adversarial_edge_list, run_subprocess
+
+from repro.testing import (
+    MAX_EXHAUSTIVE_EVENTS,
+    MUTATIONS,
+    ApramViolation,
+    ConformanceError,
+    bipartite_stream,
+    exhaustive_schedules,
+    hub_contention,
+    pin_entry_points,
+    pin_trace,
+    random_schedule,
+    round_robin,
+    run_schedule,
+    stream_order,
+    sweep,
+    witness_schedule,
+)
+
+TOOLS = Path(__file__).resolve().parent.parent / "tools"
+CORPUS = Path(__file__).resolve().parent / "fuzz_corpus"
+
+
+# ---------------------------------------------------------------------------
+# 1. model soundness
+# ---------------------------------------------------------------------------
+def test_schedule_must_be_permutation():
+    u, v = np.array([0, 1]), np.array([1, 2])
+    with pytest.raises(ValueError, match="permutation"):
+        run_schedule((u, v, 3), [0, 0])
+    with pytest.raises(ValueError, match="permutation"):
+        run_schedule((u, v, 3), [0])
+
+
+def test_unknown_mutation_rejected():
+    with pytest.raises(ValueError, match="unknown mutation"):
+        run_schedule((np.array([0]), np.array([1]), 2), [0],
+                     mutation="nonsense")
+
+
+def test_invalid_edges_are_skipped_events():
+    # self-loop, negative, out-of-range: decided, never matched
+    u = np.array([0, -1, 2, 0])
+    v = np.array([0, 3, 9, 1])
+    r = run_schedule((u, v, 3), stream_order(4))
+    assert list(r.matched) == [False, False, False, True]
+    assert r.decided.all()
+
+
+@pytest.mark.parametrize("mname", sorted(MUTATIONS))
+def test_every_mutation_is_caught(mname):
+    """Each seeded protocol bug trips a per-step invariant on at least one
+    schedule of a contended instance — the harness has teeth."""
+    g = adversarial_edge_list(seed=1, n=16, m=24)
+    caught = None
+    for seed in range(6):
+        try:
+            run_schedule(g, random_schedule(g.num_edges, seed),
+                         mutation=mname)
+            run_schedule(g, stream_order(g.num_edges), mutation=mname)
+        except ApramViolation as err:
+            caught = err
+            break
+    assert caught is not None, f"mutation {mname} survived every schedule"
+    assert caught.invariant, caught
+
+
+def test_non_strict_records_instead_of_raising():
+    g = adversarial_edge_list(seed=1, n=16, m=24)
+    r = run_schedule(g, stream_order(g.num_edges),
+                     mutation="skip_partner_check", strict=False)
+    assert r.violations, "expected recorded violations"
+    assert all(isinstance(x, ApramViolation) for x in r.violations)
+
+
+def test_round_robin_and_hub_schedules_are_permutations():
+    g = adversarial_edge_list(seed=3, n=16, m=24)
+    m = g.num_edges
+    for s in (round_robin(m, 3), round_robin(m, 100), hub_contention(g),
+              random_schedule(m, 9)):
+        assert np.array_equal(np.sort(s), np.arange(m))
+
+
+def test_exhaustive_refuses_large_m():
+    with pytest.raises(ValueError, match="refused"):
+        list(exhaustive_schedules(MAX_EXHAUSTIVE_EVENTS + 1))
+
+
+# ---------------------------------------------------------------------------
+# 2. schedule-independence
+# ---------------------------------------------------------------------------
+# Tiny instances, V <= 8, m <= 7 events (7! = 5040 schedules each). Shapes
+# chosen for contention: odd cycles, stars with duplicate slots, a clique,
+# self-loops and padding in the stream.
+TINY = {
+    "triangle": ([0, 1, 2], [1, 2, 0], 3),
+    "path6": ([0, 1, 2, 3, 4], [1, 2, 3, 4, 5], 6),
+    "star_dup": ([0, 0, 0, 0, 0], [1, 2, 3, 1, 2], 5),
+    "cycle5": ([0, 1, 2, 3, 4], [1, 2, 3, 4, 0], 5),
+    "k4": ([0, 0, 0, 1, 1, 2], [1, 2, 3, 2, 3, 3], 4),
+    "hazards": ([0, 0, 2, 2, -1, 3], [0, 1, 3, 3, 1, 4], 8),
+    "two_hubs": ([0, 0, 0, 1, 1, 1, 0], [2, 3, 4, 2, 3, 4, 1], 8),
+}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("gname", sorted(TINY))
+def test_exhaustive_every_interleaving_valid_maximal(gname):
+    """The APRAM safety claim by enumeration: every one of the m!
+    schedules passes per-step checks and quiesces valid+maximal."""
+    u, v, n = TINY[gname]
+    u, v = np.asarray(u), np.asarray(v)
+    assert n <= 8 and len(u) <= 7
+    outcomes = set()
+    count = 0
+    for s in exhaustive_schedules(len(u)):
+        r = run_schedule((u, v, n), s)  # strict: raises on any violation
+        outcomes.add(r.matching_key())
+        count += 1
+    assert count == math.factorial(len(u))
+    assert len(outcomes) >= 1
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_adversary_sweep_on_contended_graphs(seed):
+    g = adversarial_edge_list(seed=seed, n=48, m=128)
+    results = sweep(g, seeds=(seed, seed + 100), threads=(2, 7))
+    # all schedules quiesce; matchings may differ, sizes within the classic
+    # 2x bound of each other
+    sizes = sorted(r.num_matches for r in results)
+    assert sizes[0] >= 1
+    assert sizes[-1] <= 2 * sizes[0]
+
+
+def test_stream_order_model_equals_sgmm():
+    """The identity schedule's outcome IS the sequential greedy oracle."""
+    from repro.core.sgmm import sgmm
+
+    g = adversarial_edge_list(seed=5, n=48, m=128)
+    model = run_schedule(g, stream_order(g.num_edges))
+    np.testing.assert_array_equal(
+        model.matched, np.asarray(sgmm(g).match_mask))
+
+
+# ---------------------------------------------------------------------------
+# 3. differential conformance — production entry points as APRAM traces
+# ---------------------------------------------------------------------------
+def test_witness_schedule_shape():
+    mask = np.array([False, True, False, True])
+    np.testing.assert_array_equal(
+        witness_schedule(None, mask), [1, 3, 0, 2])
+
+
+def test_pin_trace_rejects_non_maximal():
+    g = adversarial_edge_list(seed=2, n=16, m=24)
+    from repro.core.sgmm import sgmm
+
+    mask = np.asarray(sgmm(g).match_mask).copy()
+    pin_trace(g, mask, label="sgmm")  # the real mask pins
+    k = int(np.flatnonzero(mask)[0])
+    mask[k] = False  # drop one matched edge: not maximal anymore
+    with pytest.raises(ConformanceError) as exc:
+        pin_trace(g, mask, label="sgmm")
+    assert exc.value.first_mismatch >= 0
+
+
+def test_pin_trace_rejects_double_booking():
+    u, v = np.array([0, 0]), np.array([1, 2])
+    with pytest.raises((ConformanceError, ApramViolation)):
+        pin_trace((u, v, 3), np.array([True, True]))
+
+
+@pytest.mark.slow
+def test_entry_points_pin_at_both_state_widths():
+    """The acceptance-criteria matrix: skipper, skipper_match (xla AND
+    interpreted-Pallas, boundary epilogue included — window < V forces
+    cross-window edges), distributed D=1, chaos-recover; each at u8 and
+    legacy_i32."""
+    from repro.graphs.generators import rmat_graph
+
+    g = rmat_graph(scale=7, edge_factor=2, seed=3)  # V=128 > window=64
+    out = pin_entry_points(g, window=64, tile_size=32)
+    expected = {
+        f"{entry}@{spec}"
+        for entry in ("skipper", "skipper_match_xla", "skipper_match_pallas",
+                      "distributed", "chaos_recover")
+        for spec in ("u8", "legacy_i32")
+    }
+    assert set(out) == expected
+    for name, trace in out.items():
+        assert trace.num_matches > 0, name
+
+
+def test_bmatch_unit_capacity_pins_as_bipartite_trace():
+    import jax.numpy as jnp
+
+    from repro.core.bipartite import bmatch_assign
+    from strategies import random_candidate_stream
+
+    tok, exp = random_candidate_stream(0, 12, 6, 40, invalid=0.1)
+    accept = np.asarray(bmatch_assign(
+        jnp.asarray(tok), jnp.asarray(exp), num_tokens=12, num_experts=6,
+        token_budget=1, expert_capacity=1, tile_size=16,
+    ))
+    stream = bipartite_stream(tok, exp, num_tokens=12, num_experts=6)
+    pin_trace(stream, accept, label="bmatch")
+
+
+_D4_PIN_SCRIPT = r"""
+import numpy as np
+import jax
+from repro.core.distributed import distributed_skipper
+from repro.core.statespec import StateSpec
+from repro.graphs.generators import erdos_renyi_graph
+from repro.testing import pin_trace
+
+assert jax.device_count() == 4, jax.device_count()
+g = erdos_renyi_graph(400, 1600, seed=2)
+for spec in (StateSpec.u8(), StateSpec.legacy_i32()):
+    res, stats = distributed_skipper(g, block_size=64, spec=spec)
+    assert stats.ok
+    pin_trace(g, np.asarray(res.match_mask), label="dist-D4-dispersed")
+    res, stats = distributed_skipper(
+        g, block_size=64, tile_size=64, window=128, reorder="degree",
+        backend="xla", spec=spec)
+    assert stats.ok
+    pin_trace(g, np.asarray(res.match_mask), label="dist-D4-sharded")
+print("SUBPROCESS_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_distributed_forced_d4_pins_as_trace():
+    """Forced 4-device runs (both schedules, both state widths) stay
+    reachable APRAM traces — device parallelism is just another schedule."""
+    run_subprocess(_D4_PIN_SCRIPT, num_devices=4)
+
+
+# ---------------------------------------------------------------------------
+# 4. fuzz corpus + canary
+# ---------------------------------------------------------------------------
+def _fuzz_mod():
+    if str(TOOLS) not in sys.path:
+        sys.path.insert(0, str(TOOLS))
+    import fuzz_matching
+
+    return fuzz_matching
+
+
+def test_fuzz_corpus_replays_clean():
+    """Every checked-in regression record passes against today's code."""
+    fm = _fuzz_mod()
+    records = sorted(CORPUS.glob("*.json"))
+    assert records, "fuzz corpus is missing"
+    for path in records:
+        rec = json.loads(path.read_text())
+        assert rec["version"] == fm.CORPUS_VERSION, path.name
+        assert fm.replay_record(rec), f"{path.name}: {rec['error']}"
+
+
+def test_corpus_covers_every_mutation():
+    """The corpus keeps one minimized catcher instance per known protocol
+    mutation (provenance: shrunk from the mutation's own counterexample)."""
+    names = {p.stem for p in CORPUS.glob("mutation_*.json")}
+    assert names == {f"mutation_{m}" for m in MUTATIONS}
+
+
+@pytest.mark.fuzz
+def test_fuzz_cli_clean_smoke(tmp_path):
+    fm = _fuzz_mod()
+    rc = fm.main(["--iterations", "3", "--time-budget", "120",
+                  "--artifacts", str(tmp_path)])
+    assert rc == 0
+    assert not list(tmp_path.glob("*.json"))
+
+
+@pytest.mark.fuzz
+def test_fuzz_cli_mutation_canary_fails(tmp_path):
+    """--mutation commit_before_reserve MUST exit 1 and write a minimized
+    counterexample — proof the fuzzer can actually catch a protocol bug."""
+    fm = _fuzz_mod()
+    rc = fm.main(["--mutation", "commit_before_reserve",
+                  "--iterations", "20", "--time-budget", "120",
+                  "--max-counterexamples", "1",
+                  "--artifacts", str(tmp_path)])
+    assert rc == 1
+    arts = list(tmp_path.glob("*.json"))
+    assert arts
+    rec = json.loads(arts[0].read_text())
+    assert rec["mutation"] == "commit_before_reserve"
+    assert rec["live_edges"] <= 6  # shrinking worked

@@ -12,7 +12,7 @@ import numpy as np
 import jax.numpy as jnp
 
 # property tests need hypothesis (a [dev] dep); the deterministic pins don't
-from _hyp import given, settings, st  # noqa: E402
+from strategies import given, settings, st  # noqa: E402
 
 from repro.core import engine
 from repro.core.bipartite import BMATCH_VECTOR_ROUNDS, bmatch_assign

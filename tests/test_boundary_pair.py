@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from _hyp import given, settings, st  # noqa: E402
+from strategies import given, random_edge_list, settings, st  # noqa: E402
 
 from repro.core import assert_matching, engine
 from repro.graphs import erdos_renyi_graph
@@ -24,10 +24,7 @@ from repro.kernels.skipper_match.kernel import (
 
 
 def _graph(rng, n, m):
-    u = rng.integers(0, n, m).astype(np.int32)
-    v = rng.integers(0, n, m).astype(np.int32)
-    lo, hi = np.minimum(u, v), np.maximum(u, v)
-    return EdgeList(jnp.asarray(lo), jnp.asarray(hi), n)
+    return random_edge_list(rng, n, m, canonical=True)
 
 
 def _check_grouping(s):

@@ -2,8 +2,7 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from strategies import given, settings, st  # noqa: E402
 
 from repro.data import (
     DataConfig, batch_for_step, documents_for_step, pack_documents,

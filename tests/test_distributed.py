@@ -17,12 +17,10 @@ raise), the vector_rounds matching-invariance, and the real-work counter
 accounting (padded sentinel slots scanned during drain rounds count
 nothing).
 """
-import os
-import subprocess
-import sys
-
 import numpy as np
 import pytest
+
+from strategies import run_subprocess as _run_subprocess  # noqa: E402
 
 from repro.core import assert_matching, sgmm
 from repro.core.distributed import distributed_skipper
@@ -35,20 +33,6 @@ from repro.graphs import (
 from repro.kernels.skipper_match import skipper_match
 
 POLICIES = ("degree", "bfs", "greedy")
-
-
-def _run_subprocess(script: str, num_devices: int, timeout: int = 900):
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={num_devices}"
-    )
-    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    proc = subprocess.run(
-        [sys.executable, "-c", script],
-        env=env, capture_output=True, text=True, timeout=timeout,
-    )
-    assert proc.returncode == 0, proc.stderr[-3000:]
-    assert "SUBPROCESS_OK" in proc.stdout, proc.stdout[-2000:]
 
 
 @pytest.mark.parametrize("gname,g", [
@@ -202,6 +186,7 @@ print("SUBPROCESS_OK")
 """
 
 
+@pytest.mark.subprocess
 def test_retry_overflow_and_undrained_raise():
     _run_subprocess(_OVERFLOW_SCRIPT, num_devices=2)
 
@@ -247,6 +232,8 @@ print("SUBPROCESS_OK")
 """
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 @pytest.mark.parametrize("num_devices", [2, 4])
 def test_sharded_equivalence_matrix_multi_device(num_devices):
     """Every reorder policy x D in {2, 4}: valid maximal matchings, >= half
@@ -283,5 +270,7 @@ print("SUBPROCESS_OK")
 """
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_distributed_eight_devices():
     _run_subprocess(_SUBPROCESS_SCRIPT, num_devices=8)

@@ -29,7 +29,12 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from _hyp import given, settings, st  # noqa: E402
+from strategies import (  # noqa: E402
+    given,
+    run_subprocess as _run_subprocess,
+    settings,
+    st,
+)
 
 from repro.core import FaultPlan, check_matching
 from repro.core.distributed import distributed_skipper
@@ -41,8 +46,6 @@ from repro.graphs import (
     erdos_renyi_graph,
 )
 from repro.kernels.skipper_match import skipper_match
-
-from test_distributed import _run_subprocess  # noqa: E402
 
 
 # One plan per injection site, all at the pinned chaos seed. lose_shard=0
@@ -69,6 +72,7 @@ def _assert_valid_maximal(g, mask, label):
 # in-process chaos matrix (D=1)
 # ---------------------------------------------------------------------------
 
+@pytest.mark.chaos
 @pytest.mark.parametrize("site", sorted(PLANS))
 def test_chaos_skipper_match_recovers(site):
     plan = PLANS[site]
@@ -84,6 +88,7 @@ def test_chaos_skipper_match_recovers(site):
         assert report.recovery_attempts >= 1
 
 
+@pytest.mark.chaos
 @pytest.mark.parametrize("site", sorted(PLANS))
 @pytest.mark.parametrize("kind", ["dispersed", "sharded"])
 def test_chaos_distributed_d1_recovers(site, kind):
@@ -229,6 +234,7 @@ def _seed_taint(plan: FaultPlan) -> np.ndarray:
     return tainted
 
 
+@pytest.mark.chaos
 @pytest.mark.parametrize("site", ["drop", "corrupt", "lose_shard"])
 def test_recovery_blast_radius_contained(site):
     """Every edge decided differently by the recovered run must be reachable
@@ -327,6 +333,9 @@ print("SUBPROCESS_OK")
 """
 
 
+@pytest.mark.chaos
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_chaos_matrix_forced_4dev():
     _run_subprocess(_CHAOS_SCRIPT, num_devices=4)
 

@@ -7,8 +7,7 @@ drives random graph instances at the system-invariant level.
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from strategies import given, random_edge_list, settings, st  # noqa: E402
 
 from repro.core import (
     sgmm, skipper, ems_israeli_itai, ems_idmm, sidmm,
@@ -108,11 +107,7 @@ def test_conflict_table_buckets():
     dispersed=st.booleans(),
 )
 def test_property_skipper_valid_maximal(n, m, seed, tile, dispersed):
-    rng = np.random.default_rng(seed)
-    import jax.numpy as jnp
-    u = jnp.asarray(rng.integers(0, n, m), jnp.int32)
-    v = jnp.asarray(rng.integers(0, n, m), jnp.int32)
-    g = EdgeList(u, v, n)
+    g = random_edge_list(seed, n, m)
     res, _ = skipper(g, tile_size=tile, dispersed=dispersed)
     out = check_matching(g, res.match_mask)
     assert bool(out["valid"]) and bool(out["maximal"])
@@ -127,13 +122,111 @@ def test_property_skipper_valid_maximal(n, m, seed, tile, dispersed):
 def test_property_all_algorithms_agree_on_coverage(n, m, seed):
     """Invariant: the set of covered vertices differs between algorithms, but
     every algorithm's output is a valid maximal matching of the same graph."""
-    rng = np.random.default_rng(seed)
-    import jax.numpy as jnp
-    g = EdgeList(
-        jnp.asarray(rng.integers(0, n, m), jnp.int32),
-        jnp.asarray(rng.integers(0, n, m), jnp.int32),
-        n,
-    )
+    g = random_edge_list(seed, n, m)
     for name, fn in ALGOS.items():
         out = check_matching(g, fn(g).match_mask)
         assert bool(out["valid"]) and bool(out["maximal"]), name
+
+
+# ---------------------------------------------------------------------------
+# edge-order adversaries: stream_pass vs the sequential-greedy oracle on
+# hazardous streams (hubs, duplicate slots, self-loops). stream_pass's
+# fixpoint IS index-order greedy — these pin it on exactly the stream
+# shapes where a reservation-order bug would diverge (ISSUE 9 satellite).
+# ---------------------------------------------------------------------------
+def _stream_pass_mask(g, tile_size=32):
+    import jax.numpy as jnp
+    from repro.core import engine
+    from repro.core.types import ACC, STATE_DTYPE
+
+    e = g.canonical()
+    m = e.num_edges
+    pad = (-m) % tile_size
+    u = jnp.concatenate([e.u, jnp.full((pad,), -1, jnp.int32)])
+    v = jnp.concatenate([e.v, jnp.full((pad,), -1, jnp.int32)])
+    state = jnp.full((g.num_vertices,), ACC, STATE_DTYPE)
+    _, matched, _ = engine.stream_pass(
+        state, u, v, n=g.num_vertices, vector_rounds=1, tile_size=tile_size
+    )
+    return np.asarray(matched)[:m]
+
+
+def _hazard_streams():
+    import jax.numpy as jnp
+
+    def star_with_hazards(seed):
+        # hub 0 fanning out, every hub edge duplicated, self-loops on the
+        # hub and leaves, plus a tail of leaf-leaf edges for contention
+        rng = np.random.default_rng(seed)
+        leaves = rng.permutation(np.arange(1, 40))
+        u = [0] * len(leaves) + [0] * len(leaves) + [0, 5, 17]
+        v = list(leaves) + list(leaves) + [0, 5, 17]
+        lu = rng.integers(1, 40, 30)
+        lv = rng.integers(1, 40, 30)
+        u += list(lu)
+        v += list(lv)
+        return EdgeList(jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32), 40)
+
+    def double_star(seed):
+        # two hubs sharing leaves: order of hub edges decides everything
+        rng = np.random.default_rng(seed)
+        m = 60
+        hub = rng.integers(0, 2, m)
+        leaf = rng.integers(2, 30, m)
+        return EdgeList(jnp.asarray(hub, jnp.int32),
+                        jnp.asarray(leaf, jnp.int32), 30)
+
+    return {
+        "star_hazards": star_with_hazards,
+        "double_star": double_star,
+    }
+
+
+@pytest.mark.parametrize("sname", sorted(_hazard_streams()))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("tile", [8, 32])
+def test_stream_pass_matches_sequential_greedy_on_hazards(sname, seed, tile):
+    g = _hazard_streams()[sname](seed)
+    got = _stream_pass_mask(g, tile_size=tile)
+    want = np.asarray(sgmm(g).match_mask)
+    np.testing.assert_array_equal(got, want)
+    assert_matching(g, sgmm(g).match_mask, f"hazard/{sname}")
+
+
+def test_stream_pass_self_loops_and_duplicates_never_match_twice():
+    import jax.numpy as jnp
+    u = jnp.asarray([3, 3, 3, 1, 1, -1], jnp.int32)
+    v = jnp.asarray([3, 4, 4, 2, 2, 5], jnp.int32)
+    g = EdgeList(u, v, 6)
+    got = _stream_pass_mask(g, tile_size=2)
+    # self-loop dead; first (3,4) wins; its duplicate dead; first (1,2)
+    # wins; its duplicate dead; invalid slot dead
+    np.testing.assert_array_equal(got, [False, True, False, True, False, False])
+
+
+# ---------------------------------------------------------------------------
+# assert_matching failure diagnostics (ISSUE 9 satellite): the message names
+# the first offending edge (u, v, stream index), not just a bare count.
+# ---------------------------------------------------------------------------
+def test_assert_matching_reports_first_collision_edge():
+    import jax.numpy as jnp
+    g = EdgeList(jnp.asarray([0, 1, 2], jnp.int32),
+                 jnp.asarray([1, 2, 3], jnp.int32), 4)
+    bad = jnp.asarray([True, True, False])  # (1,2) reuses vertex 1
+    with pytest.raises(AssertionError) as exc:
+        assert_matching(g, bad, "unit")
+    msg = str(exc.value)
+    assert "unit: matching has endpoint collisions" in msg
+    assert "(1, 2)" in msg and "stream index 1" in msg
+
+
+def test_assert_matching_reports_first_uncovered_edge():
+    import jax.numpy as jnp
+    g = EdgeList(jnp.asarray([0, 2], jnp.int32),
+                 jnp.asarray([1, 3], jnp.int32), 4)
+    bad = jnp.asarray([True, False])  # (2,3) left free
+    with pytest.raises(AssertionError) as exc:
+        assert_matching(g, bad, "unit")
+    msg = str(exc.value)
+    assert "unit: matching is not maximal" in msg
+    assert "(2, 3)" in msg and "stream index 1" in msg

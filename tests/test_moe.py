@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 
 # only the property test needs hypothesis (a [dev] dep)
-from _hyp import given, settings, st  # noqa: E402
+from strategies import given, settings, st  # noqa: E402
 
 from repro.configs import get_smoke_config
 from repro.core.bipartite import bmatch_assign

@@ -21,7 +21,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from _hyp import given, settings, st
+from strategies import (  # noqa: E402
+    given,
+    run_subprocess as _run_subprocess,
+    settings,
+    st,
+)
+
 from repro.core import assert_matching
 from repro.core.bipartite import bmatch_assign
 from repro.core.distributed import distributed_skipper
@@ -32,7 +38,6 @@ from repro.graphs import erdos_renyi_graph, grid_graph, rmat_graph
 from repro.graphs.types import EdgeList
 from repro.graphs.windows import build_window_schedule
 from repro.kernels.skipper_match import skipper_match
-from test_distributed import _run_subprocess
 
 SPECS = {
     "u8": StateSpec.u8(),
@@ -242,6 +247,8 @@ print("SUBPROCESS_OK")
 """
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_spec_equivalence_forced_4_devices():
     """u8 max-combine == legacy i32 psum across a real 4-way shard_map:
     the disjoint-rows argument for the width-honest combine, executed."""
