@@ -112,6 +112,21 @@ def main():
     print(f"pallas kernel (|E|={small.num_edges:,}): {s_k['num_matches']:,} matches | "
           f"valid={s_k['valid']} maximal={s_k['maximal']}")
 
+    # 6. static kernel conformance (DESIGN.md §14) — the same checks the
+    # static-analysis CI job gates on, scoped to the kernel targets here;
+    # the full sweep (+ sources, + JSON artifact) is
+    #   PYTHONPATH=src python tools/analyze.py src/repro --json report.json
+    from repro.analysis import analyze_targets
+
+    report = analyze_targets(["boundary_kernel", "pipeline_kernel"])
+    budget = next(f.data for f in report.findings
+                  if f.rule == "vmem-budget" and f.data
+                  and "total_bytes" in f.data)
+    print(f"conformance: {len(report.targets_analyzed)} kernel targets | "
+          f"clean={report.clean} | boundary VMEM/step "
+          f"{budget['total_bytes'] / 1024:.0f} KiB (V-independent, "
+          f"DMA-ordered, one-hot gathers only)")
+
 
 if __name__ == "__main__":
     main()

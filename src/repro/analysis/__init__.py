@@ -1,0 +1,57 @@
+"""Kernel conformance analyzer — static Mosaic/DMA/VMEM verification on CPU.
+
+CPU CI only ever executes the Pallas *interpreter* and the xla twins, so
+every Mosaic-specific hazard the ROADMAP lists as "verify on silicon" —
+dynamic gather/scatter that blocks lowering, DMA/semaphore sequencing in
+the block-pair epilogue, ANY-memory state aliasing, the uint8 (32, 128)
+min-tile geometry — is invisible until someone gets TPU time. This package
+closes that gap statically: every production ``pallas_call`` kernel and
+jitted entry point is traced to a jaxpr via abstract eval (no TPU needed)
+and a rule battery *proves* per commit that
+
+* no kernel contains dynamic fancy indexing / traced-index gather-scatter
+  on VMEM values — only the one-hot matmul gathers of the DESIGN.md §10
+  contract (``rules/mosaic_lowering.py``);
+* every ``make_async_copy`` start is paired with exactly one wait, nothing
+  is double-waited, and the boundary epilogue's v-then-u write-back
+  ordering on the aliased ANY-memory state holds — plus a race check over
+  the per-grid-step read/write block sets derived from the BlockSpec index
+  maps (``rules/dma_order.py``);
+* the per-grid-step VMEM footprint fits the budget, is independent of V,
+  and the uint8 state blocks honor the (32, 128) min-tile lane geometry
+  (``rules/vmem_budget.py``);
+* host sync points (``device_get`` / ``.item()``) appear only at
+  documented sites and ``lru_cache``'d builders are keyed on hashable
+  statics only (``rules/host_sync.py``);
+* no literal state dtype escapes ``core/statespec`` (``rules/state_dtype
+  .py`` — the former ``tools/lint_state_dtype.py``, now a rule) and no
+  internal caller touches the deprecated ``DistStats.gathered_ints``
+  alias (``rules/deprecated_alias.py``).
+
+Entry points: ``tools/analyze.py`` (CLI, JSON report, seeded mutation
+canaries), or programmatically::
+
+    from repro.analysis import run_analysis
+    report = run_analysis()          # all targets + src/repro sources
+    assert report.clean, report.render()
+
+See DESIGN.md §14 for what static conformance proves vs. what still needs
+silicon.
+"""
+from repro.analysis.report import Finding, Report, Severity
+from repro.analysis.runner import (
+    analyze_mutation,
+    analyze_sources,
+    analyze_targets,
+    run_analysis,
+)
+
+__all__ = [
+    "Finding",
+    "Report",
+    "Severity",
+    "analyze_mutation",
+    "analyze_sources",
+    "analyze_targets",
+    "run_analysis",
+]

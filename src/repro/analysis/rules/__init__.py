@@ -1,0 +1,38 @@
+"""Rule battery for the kernel conformance analyzer.
+
+Three rule kinds (``base.py``):
+
+* ``SourceRule``  — AST/text checks over ``.py`` files (state-dtype,
+  host-sync, lru-static-key, deprecated-alias).
+* ``KernelRule``  — checks over one traced ``pallas_call`` kernel jaxpr
+  (mosaic-gather, dma-happens-before, writeback-order, tile-geometry).
+* ``TargetRule``  — checks over a whole traced entry point (block-race,
+  vmem-budget, traced-callback, pallas-count).
+
+``ALL_RULES`` is the canonical battery; pass ``--rules`` to the CLI to run
+a subset. Each rule's findings carry its name, so a seeded mutation canary
+is "caught" precisely when the expected rule reports an ERROR.
+"""
+from repro.analysis.rules.base import (
+    ALL_RULES,
+    KernelRule,
+    Rule,
+    SourceRule,
+    TargetRule,
+    get_rules,
+    kernel_rules,
+    source_rules,
+    target_rules,
+)
+
+__all__ = [
+    "ALL_RULES",
+    "KernelRule",
+    "Rule",
+    "SourceRule",
+    "TargetRule",
+    "get_rules",
+    "kernel_rules",
+    "source_rules",
+    "target_rules",
+]

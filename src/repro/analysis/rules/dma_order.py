@@ -1,0 +1,124 @@
+"""Rules: dma-happens-before + writeback-order.
+
+``dma-happens-before`` is the conformance encoding of the deterministic-
+reservation commit discipline (Blelloch et al., PAPERS.md): an async copy
+is only *observable* after its wait, so every ``dma_start`` must be paired
+with exactly one ``dma_wait`` on the same (semaphore, src, dst) triple in
+the same straight-line region — an unwaited copy is a use-before-arrival
+race, a double wait deadlocks on silicon even though the interpreter
+shrugs.
+
+``writeback-order`` checks the boundary epilogue's aliasing contract
+(DESIGN.md §10) on kernels that manually DMA into an input-output-aliased
+ANY-memory ref: the LAST write-back must be unconditional and target the
+u-block row (the row selected by scalar-prefetch operand 0), so same-block
+pairs — which never load the v row — always have their only meaningful row
+land last and win.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.analysis.report import Finding, Severity
+from repro.analysis.rules.base import KernelRule
+
+
+class DmaHappensBefore(KernelRule):
+    name = "dma-happens-before"
+
+    def check_kernel(self, artifact) -> List[Finding]:
+        findings: List[Finding] = []
+        where = f"{artifact.target}/{artifact.name}"
+        groups: Dict[Tuple, List] = {}
+        for ev in artifact.dma_events():
+            groups.setdefault((ev.region, ev.key), []).append(ev)
+
+        for (region, _key), evs in sorted(
+            groups.items(), key=lambda kv: kv[1][0].position
+        ):
+            evs.sort(key=lambda e: e.position)
+            outstanding = 0
+            route = f"{evs[0].src_space}->{evs[0].dst_space}"
+            ctx = "cond branch" if region else "kernel body"
+            for ev in evs:
+                if ev.kind == "start":
+                    outstanding += 1
+                else:
+                    if outstanding == 0:
+                        findings.append(self.finding(
+                            Severity.ERROR, where,
+                            f"dma_wait with no outstanding dma_start "
+                            f"({route}, {ctx}): double wait deadlocks on "
+                            f"the DMA semaphore",
+                            data={"route": route, "position": ev.position},
+                        ))
+                    else:
+                        outstanding -= 1
+            if outstanding > 0:
+                findings.append(self.finding(
+                    Severity.ERROR, where,
+                    f"{outstanding} unwaited dma_start ({route}, {ctx}): "
+                    f"the copy may still be in flight when its destination "
+                    f"is read (use-before-arrival race)",
+                    data={"route": route, "unwaited": outstanding},
+                ))
+        return findings
+
+
+class WritebackOrder(KernelRule):
+    name = "writeback-order"
+
+    def check_kernel(self, artifact) -> List[Finding]:
+        where = f"{artifact.target}/{artifact.name}"
+        ops = artifact.operands()
+        aliased_outputs = {
+            ops[dst_kernel_pos].index
+            for _in_pos, out_pos in artifact.input_output_aliases
+            for dst_kernel_pos in [self._output_operand_index(ops, out_pos)]
+            if dst_kernel_pos is not None
+            and ops[dst_kernel_pos].space == "any"
+        }
+        if not aliased_outputs:
+            return []  # no manually-DMA'd aliased state: rule not applicable
+
+        invar_by_id = {id(v): i for i, v in enumerate(artifact.jaxpr.invars)}
+        writebacks = [
+            ev for ev in artifact.dma_events()
+            if ev.kind == "start"
+            and invar_by_id.get(id(ev.dst_var)) in aliased_outputs
+        ]
+        if not writebacks:
+            return [self.finding(
+                Severity.ERROR, where,
+                "aliased ANY-memory state ref is never written back: every "
+                "grid step's commits are lost",
+            )]
+
+        last = max(writebacks, key=lambda e: e.position)
+        if last.region:
+            return [self.finding(
+                Severity.ERROR, where,
+                "final state write-back is conditional: same-block pairs "
+                "(which skip the v row) can end the step without their u "
+                "row landing last (DESIGN.md §10 v-then-u contract)",
+                data={"region": repr(last.region)},
+            )]
+        sources = [artifact.scalar_source(v) for v in last.index_vars]
+        if sources and all(s not in (None, 0) for s in sources):
+            return [self.finding(
+                Severity.ERROR, where,
+                f"final unconditional state write-back targets the row of "
+                f"scalar-prefetch operand {sources[0]}, not the u block "
+                f"(operand 0): v-then-u write-back order is inverted and a "
+                f"stale v row wins for same-block pairs",
+                data={"row_source": sources[0]},
+            )]
+        return []
+
+    @staticmethod
+    def _output_operand_index(ops, out_pos):
+        """Kernel-operand index of grid output ``out_pos``."""
+        outs = [op.index for op in ops if op.role == "output"]
+        if out_pos < len(outs):
+            return outs[out_pos]
+        return None

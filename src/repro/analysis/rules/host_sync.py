@@ -1,0 +1,142 @@
+"""Rules: host-sync, lru-static-key, traced-callback.
+
+``host-sync`` enforces the one-fetch contract: blocking device->host sync
+points (``jax.device_get`` / ``.item()``) are only allowed in library code
+at documented sites carrying a ``# host-sync: ok`` waiver — everywhere
+else they silently serialize the dispatch stream (the distributed driver's
+whole DistStats design exists to keep this to ONE fetch per round).
+Scoped to ``src/repro``; benchmarks, examples, tools, and tests are host
+drivers and fetch freely.
+
+``lru-static-key`` guards the PR 3/PR 5 recompile fixes: an
+``lru_cache``'d builder must be keyed on hashable statics only — a
+mutable default (list/dict/set) raises at call time, and array-ish
+parameter names are a smell that a traced value leaked into the cache key
+(every call would then miss and re-trace).
+
+``traced-callback`` (target rule) asserts entry-point jaxprs are free of
+host callbacks (``pure_callback`` / ``io_callback`` / ``debug_callback``):
+a callback inside a jitted matcher would sync every step.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.report import Finding, Severity
+from repro.analysis.rules.base import SourceFile, SourceRule, TargetRule
+from repro.analysis.trace import iter_eqns
+
+_ARRAYISH_PARAMS = {"u", "v", "edges", "state", "arr", "array"}
+
+
+def _in_library(path: str) -> bool:
+    p = path.replace("\\", "/")
+    return "src/repro/" in p or p.startswith("src/repro")
+
+
+class HostSync(SourceRule):
+    name = "host-sync"
+
+    def check_file(self, src: SourceFile) -> List[Finding]:
+        if src.tree is None or not _in_library(src.path):
+            return []
+        findings: List[Finding] = []
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if not isinstance(f, ast.Attribute):
+                continue
+            if f.attr == "device_get":
+                what = "jax.device_get"
+            elif f.attr == "item" and not node.args and not node.keywords:
+                what = ".item()"
+            else:
+                continue
+            if self.waived(src, node.lineno):
+                continue
+            findings.append(self.finding(
+                Severity.ERROR, src.path,
+                f"{what} is a blocking host sync outside the documented "
+                f"sites — route it through the one-fetch DistStats path or "
+                f"waive with '# {self.name}: ok'",
+                lineno=node.lineno,
+            ))
+        return findings
+
+
+class LruStaticKey(SourceRule):
+    name = "lru-static-key"
+
+    def check_file(self, src: SourceFile) -> List[Finding]:
+        if src.tree is None:
+            return []
+        findings: List[Finding] = []
+        for node in ast.walk(src.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not any(self._is_lru(d) for d in node.decorator_list):
+                continue
+            if self.waived(src, node.lineno):
+                continue
+            a = node.args
+            defaults = list(a.defaults) + list(a.kw_defaults or [])
+            for d in defaults:
+                if d is None:
+                    continue
+                if isinstance(d, (ast.List, ast.Dict, ast.Set)) or (
+                    isinstance(d, ast.Call)
+                    and isinstance(d.func, ast.Name)
+                    and d.func.id in ("list", "dict", "set")
+                ):
+                    findings.append(self.finding(
+                        Severity.ERROR, src.path,
+                        f"lru_cache'd `{node.name}` has an unhashable "
+                        f"(mutable) default — every call raises or misses "
+                        f"the cache; key builders on hashable statics only",
+                        lineno=node.lineno,
+                    ))
+            for arg in list(a.args) + list(a.kwonlyargs) + list(
+                a.posonlyargs
+            ):
+                if arg.arg in _ARRAYISH_PARAMS:
+                    findings.append(self.finding(
+                        Severity.WARNING, src.path,
+                        f"lru_cache'd `{node.name}` takes parameter "
+                        f"`{arg.arg}` — an array-ish name in a cache key "
+                        f"suggests a traced value leaked into the builder "
+                        f"signature (constant cache misses / retraces)",
+                        lineno=node.lineno,
+                    ))
+        return findings
+
+    @staticmethod
+    def _is_lru(dec: ast.AST) -> bool:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        if isinstance(target, ast.Attribute):
+            return target.attr == "lru_cache"
+        if isinstance(target, ast.Name):
+            return target.id == "lru_cache"
+        return False
+
+
+class TracedCallback(TargetRule):
+    name = "traced-callback"
+
+    def check_target(self, target, closed_jaxpr, artifacts) -> List[Finding]:
+        jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+        hits = {}
+        for eqn in iter_eqns(jaxpr):
+            prim = eqn.primitive.name
+            if "callback" in prim:
+                hits[prim] = hits.get(prim, 0) + 1
+        return [
+            self.finding(
+                Severity.ERROR, target.name,
+                f"{n} `{prim}` eqn(s) in the entry-point jaxpr: a host "
+                f"callback inside a jitted matcher syncs every dispatch",
+                data={"primitive": prim, "count": n},
+            )
+            for prim, n in sorted(hits.items())
+        ]

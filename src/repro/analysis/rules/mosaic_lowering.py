@@ -1,0 +1,53 @@
+"""Rule: mosaic-gather — no dynamic gather/scatter inside kernel bodies.
+
+Mosaic cannot lower data-dependent vector gathers/scatters on VMEM values
+(and has no sort); the DESIGN.md §10 contract is that every state
+gather/scatter in the kernels is a one-hot matmul (``dot_general`` on the
+MXU) and block selection happens either through BlockSpec index maps or
+explicit DMA of whole rows. This rule walks the kernel jaxpr (including
+cond/while sub-jaxprs) and errors on any primitive from the
+un-lowerable family. The jnp twins run through XLA and may gather freely —
+they are not kernel artifacts, so this rule never sees them.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.report import Finding, Severity
+from repro.analysis.rules.base import KernelRule
+from repro.analysis.trace import iter_eqns
+
+# jaxpr primitives that require data-dependent vector indexing (or are
+# otherwise known-unlowerable on the VPU/MXU path our kernels use)
+FORBIDDEN = {
+    "gather": "data-dependent vector gather",
+    "scatter": "data-dependent vector scatter",
+    "scatter-update": "data-dependent vector scatter",
+    "scatter_update": "data-dependent vector scatter",
+    "scatter-add": "data-dependent vector scatter-add",
+    "scatter_add": "data-dependent vector scatter-add",
+    "sort": "vector sort (no Mosaic lowering)",
+    "argsort": "vector sort (no Mosaic lowering)",
+}
+
+
+class MosaicGather(KernelRule):
+    name = "mosaic-gather"
+
+    def check_kernel(self, artifact) -> List[Finding]:
+        findings: List[Finding] = []
+        counts = {}
+        for eqn in iter_eqns(artifact.jaxpr):
+            prim = eqn.primitive.name
+            if prim in FORBIDDEN:
+                counts[prim] = counts.get(prim, 0) + 1
+        for prim, n in sorted(counts.items()):
+            findings.append(self.finding(
+                Severity.ERROR,
+                f"{artifact.target}/{artifact.name}",
+                f"{n} `{prim}` eqn(s) in kernel body: {FORBIDDEN[prim]} "
+                f"blocks Mosaic lowering — use the one-hot matmul "
+                f"gather/scatter (DESIGN.md §10)",
+                data={"primitive": prim, "count": n},
+            ))
+        return findings

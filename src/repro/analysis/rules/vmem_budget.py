@@ -1,0 +1,235 @@
+"""Rules: vmem-budget, tile-geometry, block-race, pallas-count.
+
+``vmem-budget`` is the static half of the roofline story: per grid step it
+sums the double-buffered block bytes, scratch, and a liveness upper bound
+on kernel intermediates, records the result (INFO — surfaced in the JSON
+report next to the roofline numbers via ``roofline.vmem_step_bytes``), and
+errors past the 16 MiB per-core VMEM capacity. For targets the registry
+marks rescalable it re-traces at 2x the vertex count with the SAME
+window/tile geometry and errors if the footprint moved — the machine-
+checked form of the O(window + tile^2), V-independent claim.
+
+``tile-geometry`` checks Mosaic min-tile alignment on every VMEM-resident
+block: lane (last) dim must be a multiple of 128 — an ERROR for the 1-byte
+state tiers, where misalignment also breaks the (32, 128) min-tile claim —
+and sublane padding (e.g. a (2, W) uint8 scratch padded to 32 rows) is
+recorded as INFO with its padding factor.
+
+``block-race`` is the grid-order race detector: it evaluates every output
+BlockSpec index map over the whole grid in execution order (last dim
+innermost) and errors when a block index is revisited non-consecutively —
+the revolving-block residency pattern is only sound when all writes to a
+block are adjacent grid steps, otherwise the pipeline's write-back of a
+later visit clobbers an earlier one (lost update).
+
+``pallas-count`` pins each entry point's kernel census: a refactor that
+silently drops (or duplicates) a pallas_call fails instead of passing
+vacuously.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.report import Finding, Severity
+from repro.analysis.rules.base import KernelRule, TargetRule
+from repro.analysis.trace import (
+    collect_pallas_calls,
+    enumerate_grid,
+    eval_index_map,
+    operand_vmem_bytes,
+    peak_live_bytes,
+)
+
+VMEM_CAPACITY = 16 * 1024 * 1024   # bytes per TPU core
+VMEM_SOFT = 8 * 1024 * 1024        # leave headroom for Mosaic's own use
+
+# Mosaic min sublane count by itemsize (lane is always 128)
+_MIN_SUBLANE = {4: 8, 2: 16, 1: 32}
+
+
+def kernel_step_bytes(artifact) -> dict:
+    """Per-grid-step VMEM byte breakdown for one traced kernel."""
+    blocks = 0
+    scratch = 0
+    for op in artifact.operands():
+        b = operand_vmem_bytes(op)
+        if op.role == "scratch":
+            scratch += b
+        else:
+            blocks += b
+    live = peak_live_bytes(artifact.jaxpr)
+    return {
+        "blocks_bytes": int(blocks),
+        "scratch_bytes": int(scratch),
+        "live_bytes": int(live),
+        "total_bytes": int(blocks + scratch + live),
+    }
+
+
+class TileGeometry(KernelRule):
+    name = "tile-geometry"
+
+    def check_kernel(self, artifact) -> List[Finding]:
+        findings: List[Finding] = []
+        where = f"{artifact.target}/{artifact.name}"
+        for op in artifact.operands():
+            if op.space != "vmem" or op.dtype is None:
+                continue
+            shape = op.block_shape or tuple(
+                int(s) for s in getattr(op.aval, "shape", ())
+            )
+            if not shape:
+                continue
+            itemsize = op.dtype.itemsize
+            min_sub = _MIN_SUBLANE.get(itemsize, 8)
+            lane = shape[-1]
+            if lane % 128 != 0:
+                sev = Severity.ERROR if itemsize == 1 else Severity.WARNING
+                findings.append(self.finding(
+                    sev, where,
+                    f"operand {op.index} ({op.role}, {op.dtype}) lane dim "
+                    f"{lane} is not a multiple of 128: min tile is "
+                    f"({min_sub}, 128)",
+                    data={"shape": list(shape), "dtype": str(op.dtype)},
+                ))
+            if len(shape) >= 2 and shape[-2] % min_sub != 0:
+                pad = min_sub / shape[-2] if shape[-2] < min_sub else 1.0
+                findings.append(self.finding(
+                    Severity.INFO, where,
+                    f"operand {op.index} ({op.role}, {op.dtype}) sublane "
+                    f"dim {shape[-2]} pads to {min_sub} "
+                    f"({pad:.0f}x resident overhead)",
+                    data={"shape": list(shape), "min_sublane": min_sub},
+                ))
+        return findings
+
+
+class BlockRace(TargetRule):
+    name = "block-race"
+
+    def check_target(self, target, closed_jaxpr, artifacts) -> List[Finding]:
+        findings: List[Finding] = []
+        for art in artifacts:
+            where = f"{target.name}/{art.name}"
+            pts = enumerate_grid(art.grid)
+            if pts is None:
+                findings.append(self.finding(
+                    Severity.INFO, where,
+                    f"grid {art.grid} too large to enumerate — race check "
+                    f"skipped",
+                ))
+                continue
+            for op in art.operands():
+                if op.role != "output" or op.block_mapping is None:
+                    continue
+                seq = []
+                dynamic = False
+                for p in pts:
+                    idx = eval_index_map(op.block_mapping, p)
+                    if idx is None:
+                        dynamic = True
+                        break
+                    seq.append(idx)
+                if dynamic:
+                    findings.append(self.finding(
+                        Severity.INFO, where,
+                        f"operand {op.index} index map is data-dependent — "
+                        f"race check skipped (covered by the DMA rules)",
+                    ))
+                    continue
+                revisit = self._nonconsecutive_revisit(seq)
+                if revisit is not None:
+                    block, first_run_end, again = revisit
+                    findings.append(self.finding(
+                        Severity.ERROR, where,
+                        f"output operand {op.index} writes block {block} at "
+                        f"non-consecutive grid steps ({first_run_end} then "
+                        f"{again}): the revolving-block pipeline writes the "
+                        f"block back between visits and the later visit "
+                        f"clobbers the earlier one (lost update)",
+                        data={"block": list(block)},
+                    ))
+        return findings
+
+    @staticmethod
+    def _nonconsecutive_revisit(seq):
+        last_seen = {}
+        for i, block in enumerate(seq):
+            if block in last_seen and last_seen[block] != i - 1:
+                return block, last_seen[block], i
+            last_seen[block] = i
+        return None
+
+
+class VmemBudget(TargetRule):
+    name = "vmem-budget"
+
+    def check_target(self, target, closed_jaxpr, artifacts) -> List[Finding]:
+        findings: List[Finding] = []
+        budgets = {}
+        for art in artifacts:
+            where = f"{target.name}/{art.name}"
+            b = kernel_step_bytes(art)
+            budgets[art.name] = b
+            total = b["total_bytes"]
+            if total > VMEM_CAPACITY:
+                sev, verdict = Severity.ERROR, "exceeds 16 MiB VMEM"
+            elif total > VMEM_SOFT:
+                sev, verdict = Severity.WARNING, "over the 8 MiB soft cap"
+            else:
+                sev, verdict = Severity.INFO, "within budget"
+            findings.append(self.finding(
+                sev, where,
+                f"per-grid-step VMEM estimate {total / 1024:.0f} KiB "
+                f"(blocks {b['blocks_bytes'] / 1024:.0f} + scratch "
+                f"{b['scratch_bytes'] / 1024:.0f} + live "
+                f"{b['live_bytes'] / 1024:.0f}) — {verdict}"
+                + (f"; claim: {target.vmem_claim}" if target.vmem_claim
+                   else ""),
+                data=b,
+            ))
+
+        if target.rescalable and budgets:
+            arts2 = collect_pallas_calls(target.trace(2), target.name)
+            for art in arts2:
+                if art.name not in budgets:
+                    continue
+                b1 = budgets[art.name]["total_bytes"]
+                b2 = kernel_step_bytes(art)["total_bytes"]
+                where = f"{target.name}/{art.name}"
+                if b2 != b1:
+                    findings.append(self.finding(
+                        Severity.ERROR, where,
+                        f"per-grid-step VMEM moved from {b1} to {b2} bytes "
+                        f"when V doubled at fixed window/tile geometry: the "
+                        f"O(window + tile^2) V-independence claim is broken",
+                        data={"bytes_1x": b1, "bytes_2x": b2},
+                    ))
+                else:
+                    findings.append(self.finding(
+                        Severity.INFO, where,
+                        f"V-independence verified: {b1} bytes/step at 1x "
+                        f"and 2x vertex count",
+                        data={"bytes_1x": b1, "bytes_2x": b2},
+                    ))
+        return findings
+
+
+class PallasCount(TargetRule):
+    name = "pallas-count"
+
+    def check_target(self, target, closed_jaxpr, artifacts) -> List[Finding]:
+        n = len(artifacts)
+        if n != target.expect_pallas:
+            return [self.finding(
+                Severity.ERROR, target.name,
+                f"expected {target.expect_pallas} pallas_call kernel(s) in "
+                f"the trace, found {n} ({[a.name for a in artifacts]}): an "
+                f"entry point lost or grew a kernel",
+                data={"expected": target.expect_pallas, "found": n},
+            )]
+        return [self.finding(
+            Severity.INFO, target.name,
+            f"kernel census: {n} pallas_call(s) "
+            f"({[a.name for a in artifacts]})",
+        )]

@@ -1,0 +1,134 @@
+"""Analyzer driver: sources + traced targets + mutation canaries.
+
+``run_analysis`` is the everything entry point (``tools/analyze.py`` is a
+thin CLI over it): AST rules over the given source roots, then jaxpr rules
+over every registry target. ``analyze_mutation`` runs the SAME rule battery
+over one seeded mutant — the canary is "caught" iff the report carries an
+ERROR, which is what the CI job asserts (exit 1, exactly).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from pathlib import Path
+from typing import List, Optional
+
+from repro.analysis import mutations as _mut
+from repro.analysis.report import Finding, Report, Severity
+from repro.analysis.rules.base import (
+    SourceFile,
+    get_rules,
+    kernel_rules,
+    source_rules,
+    target_rules,
+)
+from repro.analysis.targets import get_targets
+from repro.analysis.trace import collect_pallas_calls
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "node_modules"}
+
+
+def _repo_root() -> Path:
+    return Path(__file__).resolve().parents[3]
+
+
+def _iter_py_files(paths: List[str]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            for f in sorted(path.rglob("*.py")):
+                if not any(part in _SKIP_DIRS for part in f.parts):
+                    out.append(f)
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+def _rel(path: Path) -> str:
+    try:
+        return str(path.resolve().relative_to(_repo_root()))
+    except ValueError:
+        return str(path)
+
+
+def analyze_sources(paths: List[str], rules=None) -> Report:
+    """Run every source rule over the ``.py`` files under ``paths``."""
+    rules = get_rules(rules)
+    srules = source_rules(rules)
+    report = Report(rules_run=[r.name for r in srules])
+    for f in _iter_py_files(paths):
+        src = SourceFile.parse(_rel(f), f.read_text())
+        report.files_analyzed += 1
+        for rule in srules:
+            report.extend(rule.check_file(src))
+    return report
+
+
+def analyze_targets(names: Optional[List[str]] = None, rules=None) -> Report:
+    """Trace every registry target and run the kernel + target rules."""
+    rules = get_rules(rules)
+    krules = kernel_rules(rules)
+    trules = target_rules(rules)
+    report = Report(rules_run=[r.name for r in krules + trules])
+    for target in get_targets(names):
+        try:
+            closed = target.trace(1)
+        except Exception as exc:  # a target that no longer traces IS a finding
+            report.targets_analyzed.append(target.name)
+            report.extend([Finding(
+                rule="trace", severity=Severity.ERROR, where=target.name,
+                message=f"target failed to trace: {type(exc).__name__}: "
+                        f"{exc}",
+            )])
+            continue
+        artifacts = collect_pallas_calls(closed, target.name)
+        report.targets_analyzed.append(target.name)
+        for art in artifacts:
+            for rule in krules:
+                report.extend(rule.check_kernel(art))
+        for rule in trules:
+            report.extend(rule.check_target(target, closed, artifacts))
+    return report
+
+
+def run_analysis(paths: Optional[List[str]] = None,
+                 targets: Optional[List[str]] = None,
+                 rules=None) -> Report:
+    """Sources + targets in one report (the CI surface)."""
+    if paths is None:
+        paths = [str(_repo_root() / "src" / "repro")]
+    report = analyze_sources(paths, rules)
+    return report.merge(analyze_targets(targets, rules))
+
+
+def analyze_mutation(name: str, rules=None) -> Report:
+    """Run the battery over one seeded mutant (see ``mutations.py``).
+
+    Kernel mutants re-trace the boundary grid spec with the mutated body
+    and run the kernel rules; the source mutant is written to a temp file
+    and linted. A clean report here means the analyzer LOST ITS TEETH.
+    """
+    if name in _mut.KERNEL_MUTATIONS:
+        closed = _mut.trace_kernel_mutation(name)
+        artifacts = collect_pallas_calls(closed, f"mutation:{name}")
+        krules = kernel_rules(get_rules(rules))
+        report = Report(
+            rules_run=[r.name for r in krules],
+            targets_analyzed=[f"mutation:{name}"],
+        )
+        for art in artifacts:
+            for rule in krules:
+                report.extend(rule.check_kernel(art))
+        return report
+    if name in _mut.SOURCE_MUTATIONS:
+        fd, tmp = tempfile.mkstemp(suffix=f"_{name}.py", text=True)
+        try:
+            with os.fdopen(fd, "w") as fh:
+                fh.write(_mut.SOURCE_MUTATIONS[name])
+            return analyze_sources([tmp], rules)
+        finally:
+            os.unlink(tmp)
+    raise KeyError(
+        f"unknown mutation {name!r}; known: {_mut.MUTATION_NAMES}"
+    )

@@ -136,13 +136,17 @@ class DistStats:
         NOTE: reading the flag synchronizes — it blocks on the device
         computation via one ``jax.device_get`` of both counters (one
         transfer, not one blocking ``int()`` per field)."""
-        ovf, und = jax.device_get((self.retry_overflow, self.undrained))
+        ovf, und = jax.device_get(  # host-sync: ok (the ONE fetch)
+            (self.retry_overflow, self.undrained)
+        )
         return int(ovf) == 0 and int(und) == 0
 
     def raise_if_bad(self) -> None:
         """Raise ``RuntimeError`` if a must-be-zero invariant tripped.
         Synchronizes, like :attr:`ok` (single ``device_get``)."""
-        ovf, und = jax.device_get((self.retry_overflow, self.undrained))
+        ovf, und = jax.device_get(  # host-sync: ok (the ONE fetch)
+            (self.retry_overflow, self.undrained)
+        )
         if int(ovf) != 0 or int(und) != 0:
             raise RuntimeError(
                 "distributed matching violated its must-be-zero invariants: "
@@ -726,7 +730,7 @@ def _apply_policy(
     elif on_fault == "recover":
         attempts = 0
         for _ in range(_MAX_ESCALATIONS):
-            ovf, und = jax.device_get(
+            ovf, und = jax.device_get(  # host-sync: ok (ladder gate)
                 (dstats.retry_overflow, dstats.undrained)
             )
             if int(ovf) == 0 and int(und) == 0:
@@ -744,7 +748,7 @@ def _apply_policy(
             edges, result.match_mask, result.state,
             tile_size=tile_size, vector_rounds=vector_rounds, spec=spec,
         )
-        res_i, cor_i = jax.device_get((residual, corrupted))
+        res_i, cor_i = jax.device_get((residual, corrupted))  # host-sync: ok (ladder gate)
         if int(res_i) > 0 or int(cor_i) > 0:
             attempts += 1  # the replay rung did real work
         result = MatchResult(
@@ -769,7 +773,7 @@ def _apply_policy(
     if verify:
         chk = check_matching(edges, result.match_mask)
         ok_v, ok_m, res_i, cor_i = (
-            int(x) for x in jax.device_get(
+            int(x) for x in jax.device_get(  # host-sync: ok (verify path)
                 (chk["valid"], chk["maximal"],
                  dstats.residual_edges, dstats.corrupted_cells)
             )

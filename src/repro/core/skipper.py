@@ -95,7 +95,7 @@ def skipper(
         from repro.core.validate import check_matching
 
         chk = check_matching(edges, result.match_mask)
-        ok_v, ok_m = (bool(x) for x in jax.device_get(
+        ok_v, ok_m = (bool(x) for x in jax.device_get(  # host-sync: ok (verify path)
             (chk["valid"], chk["maximal"])
         ))
         if not (ok_v and ok_m):

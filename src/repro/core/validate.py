@@ -117,7 +117,8 @@ def _first_offender(edges: EdgeList, match_mask) -> str:
 
 
 def assert_matching(edges: EdgeList, match_mask: jax.Array, label: str = "") -> Dict[str, int]:
-    out = {k: v.item() if hasattr(v, "item") else v for k, v in check_matching(edges, match_mask).items()}
+    out = {k: v.item() if hasattr(v, "item") else v  # host-sync: ok (assert helper)
+           for k, v in check_matching(edges, match_mask).items()}
     assert out["valid"], (
         f"{label}: matching has endpoint collisions — "
         + _first_offender(edges, match_mask)

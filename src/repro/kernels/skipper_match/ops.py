@@ -375,25 +375,31 @@ def skipper_match(
             tile_size=schedule.tile_size, vector_rounds=vector_rounds,
             spec=spec,
         )
-        res_i, cor_i = (int(x) for x in jax.device_get((residual, corrupted)))
+        res_i, cor_i = (
+            int(x) for x in
+            jax.device_get((residual, corrupted))  # host-sync: ok (fault recovery)
+        )
         result = MatchResult(match_mask=rmask, state=rstate, counters=counters)
         report = RecoveryReport(
             recovery_attempts=1 if (res_i or cor_i) else 0,
             residual_edges=res_i,
-            recovered_matches=int(jax.device_get(recovered)),
+            recovered_matches=int(jax.device_get(recovered)),  # host-sync: ok
             corrupted_cells=cor_i,
         )
     elif on_fault == "report" or verify:
         residual, corrupted = detect_residual(
             edges, result.match_mask, result.state
         )
-        res_i, cor_i = (int(x) for x in jax.device_get((residual, corrupted)))
+        res_i, cor_i = (
+            int(x) for x in
+            jax.device_get((residual, corrupted))  # host-sync: ok (fault report)
+        )
         report = RecoveryReport(
             residual_edges=res_i, corrupted_cells=cor_i
         )
     if verify:
         chk = check_matching(edges, result.match_mask)
-        ok_v, ok_m = (bool(x) for x in jax.device_get(
+        ok_v, ok_m = (bool(x) for x in jax.device_get(  # host-sync: ok (verify path)
             (chk["valid"], chk["maximal"])
         ))
         if on_fault == "recover" and not (ok_v and ok_m):

@@ -102,10 +102,13 @@ def train(arch: str, smoke: bool, steps: int, batch_size: int, seq_len: int,
                 )
                 t0 = time.time()
             if ckpt and (step + 1) % tcfg.checkpoint_every == 0:
-                ckpt.save(step + 1, jax.device_get(params),
-                          jax.device_get(opt_state))
+                ckpt.save(step + 1,
+                          jax.device_get(params),  # host-sync: ok (checkpoint)
+                          jax.device_get(opt_state))  # host-sync: ok (checkpoint)
         if ckpt:
-            ckpt.save(steps, jax.device_get(params), jax.device_get(opt_state),
+            ckpt.save(steps,
+                      jax.device_get(params),  # host-sync: ok (final checkpoint)
+                      jax.device_get(opt_state),  # host-sync: ok (final checkpoint)
                       block=True)
             ckpt.wait()
     return losses

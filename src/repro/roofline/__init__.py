@@ -7,9 +7,12 @@ from repro.roofline.analysis import (
     HBM_BW,
     LINK_BW,
     HBM_PER_CHIP,
+    state_traffic_bytes,
+    vmem_step_bytes,
 )
 
 __all__ = [
     "RooflineTerms", "analyze", "collective_bytes", "model_flops",
     "PEAK_FLOPS", "HBM_BW", "LINK_BW", "HBM_PER_CHIP",
+    "state_traffic_bytes", "vmem_step_bytes",
 ]

@@ -220,3 +220,24 @@ def model_flops(cfg, shape, n_params_active: int, n_params_total: int) -> float:
         return 2.0 * n_params_active * tokens
     # decode: one token per sequence
     return 2.0 * n_params_active * shape.global_batch
+
+
+def vmem_step_bytes(target: str = "boundary_kernel") -> Dict[str, Dict]:
+    """Per-grid-step VMEM byte budget of a traced kernel target, keyed by
+    kernel name — the static companion to :func:`state_traffic_bytes`.
+
+    Delegates to the conformance analyzer (``repro.analysis``): the target
+    is traced to a jaxpr on CPU and each pallas kernel's resident bytes
+    are decomposed into double-buffered blocks, scratch, and a liveness
+    upper bound on intermediates — the same numbers the ``vmem-budget``
+    rule gates in CI, surfaced here so roofline studies can quote them.
+    Targets: see ``repro.analysis.targets.TARGETS`` (e.g.
+    ``boundary_kernel``, ``pipeline_kernel``, ``flash_attention``).
+    """
+    from repro.analysis.rules.vmem_budget import kernel_step_bytes
+    from repro.analysis.targets import get_targets
+    from repro.analysis.trace import collect_pallas_calls
+
+    (tgt,) = get_targets([target])
+    arts = collect_pallas_calls(tgt.trace(1), tgt.name)
+    return {a.name: kernel_step_bytes(a) for a in arts}

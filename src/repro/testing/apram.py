@@ -189,7 +189,7 @@ def _check_matching_host(u, v, n, mask) -> dict:
         jnp.asarray(u, jnp.int32), jnp.asarray(v, jnp.int32), int(n)
     )
     out = check_matching(e, jnp.asarray(mask))
-    host = jax.device_get(out)
+    host = jax.device_get(out)  # host-sync: ok (test oracle)
     return {k: (bool(x) if x.dtype == np.bool_ else int(x))
             for k, x in host.items()}
 

@@ -207,6 +207,29 @@ def test_diststats_gathered_ints_alias_deprecated():
     assert gi == int(stats.gathered_bytes) // 4
 
 
+def test_diststats_gathered_ints_warns_exactly_once():
+    """The alias is for EXTERNAL callers: under the default filter a
+    caller site warns once, not once per access — and no internal code
+    path touches the alias at all (also pinned by the analyzer's
+    deprecated-alias rule), so a plain run warns zero times."""
+    import warnings
+
+    g = grid_graph(12, 12)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("default")
+        _, stats = distributed_skipper(g, block_size=256)
+    assert not [w for w in rec
+                if issubclass(w.category, DeprecationWarning)
+                and "gathered" in str(w.message)]
+
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("default")
+        for _ in range(3):
+            _ = stats.gathered_ints
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, [str(w.message) for w in dep]
+
+
 def test_chaos_recover_spec_equivalence():
     """The recovery ladder under injected faults lands on the same
     valid+maximal matching at either width (same seeded victims, same

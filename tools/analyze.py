@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Kernel conformance analyzer CLI (see ``src/repro/analysis/``).
+
+Traces every production pallas kernel + jitted entry point to jaxprs on
+CPU and runs the full rule battery (Mosaic-lowerability, DMA
+happens-before, write-back ordering, VMEM budget / V-independence, tile
+geometry, block races, host-sync hygiene, lru cache keys, state dtypes,
+deprecated aliases) over them plus the given source roots.
+
+Usage::
+
+    PYTHONPATH=src python tools/analyze.py [paths...]         # default: src/repro
+    PYTHONPATH=src python tools/analyze.py src/repro benchmarks examples
+    PYTHONPATH=src python tools/analyze.py --json report.json src/repro
+    PYTHONPATH=src python tools/analyze.py --targets boundary_kernel
+    PYTHONPATH=src python tools/analyze.py --rules state-dtype src/repro
+    PYTHONPATH=src python tools/analyze.py --mutation dropped_dma_wait
+    PYTHONPATH=src python tools/analyze.py --list
+
+Exit codes: 0 clean, 1 findings at ERROR severity, 2 analyzer crash.
+``--mutation`` runs the battery over one seeded mutant — the CI canary
+asserts exit code 1 EXACTLY (0 means the analyzer lost its teeth, 2 means
+it crashed; both fail the build).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SRC = REPO_ROOT / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="analyze.py",
+        description="static kernel conformance analyzer",
+    )
+    ap.add_argument("paths", nargs="*",
+                    help="source roots/files to lint (default: src/repro)")
+    ap.add_argument("--json", metavar="FILE",
+                    help="write the JSON report here ('-' for stdout)")
+    ap.add_argument("--targets", nargs="*", default=None,
+                    help="trace only these registry targets")
+    ap.add_argument("--rules", nargs="*", default=None,
+                    help="run only these rules")
+    ap.add_argument("--mutation", metavar="NAME",
+                    help="analyze one seeded mutant instead of the tree")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="source rules only (skip jaxpr tracing)")
+    ap.add_argument("--list", action="store_true",
+                    help="list rules, targets, and mutations, then exit")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="also print INFO findings")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import (
+        analyze_mutation, analyze_sources, run_analysis,
+    )
+
+    if args.list:
+        from repro.analysis.mutations import MUTATION_NAMES
+        from repro.analysis.rules import ALL_RULES
+        from repro.analysis.targets import TARGETS
+        print("rules:    ", " ".join(r.name for r in ALL_RULES))
+        print("targets:  ", " ".join(sorted(TARGETS)))
+        print("mutations:", " ".join(MUTATION_NAMES))
+        return 0
+
+    if args.mutation:
+        report = analyze_mutation(args.mutation, rules=args.rules)
+    elif args.no_trace:
+        report = analyze_sources(args.paths or ["src/repro"], rules=args.rules)
+    else:
+        report = run_analysis(
+            paths=args.paths or None, targets=args.targets, rules=args.rules,
+        )
+
+    if args.json == "-":
+        print(report.to_json())
+    else:
+        print(report.render(verbose=args.verbose))
+        if args.json:
+            Path(args.json).write_text(report.to_json() + "\n")
+            print(f"json report -> {args.json}")
+
+    return 0 if report.clean else 1
+
+
+if __name__ == "__main__":
+    try:
+        code = main()
+    except Exception as exc:  # crash != caught: CI tells them apart
+        print(f"analyzer crashed: {type(exc).__name__}: {exc}",
+              file=sys.stderr)
+        code = 2
+    sys.exit(code)

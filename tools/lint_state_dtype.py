@@ -1,184 +1,39 @@
 #!/usr/bin/env python
-"""Lint: no hardcoded vertex-state dtypes outside ``core/statespec.py``.
+"""Back-compat shim: the state-dtype lint is now an analyzer rule.
 
-The state-width refactor (DESIGN.md §12) made ``core/statespec.StateSpec``
-the single source of truth for how wide vertex state is at rest, in VMEM,
-on the wire, and in counters. A literal ``jnp.int32`` / ``jnp.uint8`` on a
-state-array allocation anywhere else silently pins one tier back to a fixed
-width and de-synchronizes it from the spec — the exact bug class this
-refactor removed. This lint fails CI when such a literal reappears.
-
-What counts as a violation: an allocator call — ``jnp.zeros`` / ``ones`` /
-``full`` / ``empty`` / ``*_like``, ``jax.ShapeDtypeStruct``,
-``pltpu.VMEM``, or ``.astype`` — whose dtype argument is a literal
-``jnp.int32`` / ``jnp.uint8`` / ``np.int32`` / ``np.uint8`` AND whose
-context names a state-ish value (the assignment target, or the ``.astype``
-receiver, matches ``state* / rebuilt / flat / used_*``). Index math, iota,
-stream ids, stats scalars etc. allocate int32 freely — their names don't
-match, and ``jnp.asarray`` is never flagged (it wraps Python scalars for
-stats, not state).
-
-Escape hatch: a genuine fixed-width site (e.g. a wire-protocol constant)
-can carry a ``# state-dtype: ok`` comment on the same line.
+The lint lives in ``src/repro/analysis/rules/state_dtype.py`` (same
+logic, same ``# state-dtype: ok`` waiver, same ``core/statespec.py``
+exemption) and runs as part of ``tools/analyze.py`` — the CI
+``static-analysis`` job replaced the old ``state-dtype-lint`` job. This
+shim keeps the historical entry point alive for scripts and muscle
+memory: it delegates to the rule and preserves the old output format and
+exit codes (0 clean, 1 violations).
 
 Usage: ``python tools/lint_state_dtype.py [paths...]`` — defaults to
-``src/repro``. Exit 0 clean, 1 with violations (one per line:
-``path:lineno: message``). Stdlib-only by design: the CI job runs it
-without installing the package.
+``src/repro``.
 """
 from __future__ import annotations
 
-import ast
-import re
 import sys
 from pathlib import Path
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
-DEFAULT_TARGET = REPO_ROOT / "src" / "repro"
-EXEMPT = {DEFAULT_TARGET / "core" / "statespec.py"}
-
-WAIVER = "# state-dtype: ok"
-DTYPE_LITERALS = {"int32", "uint8"}
-DTYPE_MODULES = {"jnp", "np", "numpy", "jax"}
-ALLOCATORS = {
-    "zeros", "ones", "full", "empty",
-    "zeros_like", "ones_like", "full_like", "empty_like",
-    "ShapeDtypeStruct", "VMEM", "astype",
-}
-# Names that denote vertex state (or its aliases through the pipelines):
-# the committed state array, the mask-rebuilt state, the flattened
-# renumbered state (the bare name ``flat`` — ``slots_flat``/``flat_tok``
-# style index names are NOT state), and the capacitated per-side used
-# counts.
-STATEISH = re.compile(
-    r"(?:^|_)(?:state|states|rebuilt|used)(?:$|_|[0-9])|^flat[0-9]*$"
-)
-
-
-def _names_in(node: ast.AST):
-    for sub in ast.walk(node):
-        if isinstance(sub, ast.Name):
-            yield sub.id
-        elif isinstance(sub, ast.Attribute):
-            yield sub.attr
-        elif isinstance(sub, ast.arg):
-            yield sub.arg
-
-
-def _is_dtype_literal(node: ast.AST) -> bool:
-    return (
-        isinstance(node, ast.Attribute)
-        and node.attr in DTYPE_LITERALS
-        and isinstance(node.value, ast.Name)
-        and node.value.id in DTYPE_MODULES
-    )
-
-
-def _dtype_literal_in_call(call: ast.Call):
-    for arg in call.args:
-        if _is_dtype_literal(arg):
-            return arg.attr
-    for kw in call.keywords:
-        if kw.arg == "dtype" and _is_dtype_literal(kw.value):
-            return kw.value.attr
-    return None
-
-
-def _allocator_name(call: ast.Call):
-    f = call.func
-    if isinstance(f, ast.Attribute):
-        return f.attr
-    if isinstance(f, ast.Name):
-        return f.id
-    return None
-
-
-def _attach_parents(tree: ast.AST) -> None:
-    for node in ast.walk(tree):
-        for child in ast.iter_child_nodes(node):
-            child._lint_parent = node  # type: ignore[attr-defined]
-
-
-def _context_names(call: ast.Call):
-    """Names the allocation binds to: walk up to the nearest assignment
-    and collect its target identifiers (plus, for ``.astype``, the
-    receiver's — ``state.astype(jnp.int32)`` is a state cast wherever the
-    result lands)."""
-    names = []
-    if isinstance(call.func, ast.Attribute) and call.func.attr == "astype":
-        names.extend(_names_in(call.func.value))
-    node: ast.AST = call
-    while node is not None:
-        parent = getattr(node, "_lint_parent", None)
-        if isinstance(parent, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
-            targets = (
-                parent.targets
-                if isinstance(parent, ast.Assign)
-                else [parent.target]
-            )
-            for t in targets:
-                names.extend(_names_in(t))
-            break
-        if isinstance(parent, (ast.FunctionDef, ast.AsyncFunctionDef,
-                               ast.Module)):
-            break
-        node = parent
-    return names
-
-
-def lint_file(path: Path):
-    source = path.read_text()
-    lines = source.splitlines()
-    try:
-        tree = ast.parse(source, filename=str(path))
-    except SyntaxError as exc:  # a broken file is its own CI failure
-        return [(path, exc.lineno or 0, f"syntax error: {exc.msg}")]
-    _attach_parents(tree)
-
-    violations = []
-    for node in ast.walk(tree):
-        if not isinstance(node, ast.Call):
-            continue
-        alloc = _allocator_name(node)
-        if alloc not in ALLOCATORS:
-            continue
-        dtype = _dtype_literal_in_call(node)
-        if dtype is None:
-            continue
-        if not any(STATEISH.search(n) for n in _context_names(node)):
-            continue
-        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
-        if WAIVER in line:
-            continue
-        violations.append((
-            path, node.lineno,
-            f"state allocation pins dtype {dtype} via {alloc}() — take the "
-            f"width from core/statespec.StateSpec (or waive with "
-            f"'{WAIVER}')",
-        ))
-    return violations
+SRC = REPO_ROOT / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
 
 
 def main(argv) -> int:
-    targets = [Path(a) for a in argv[1:]] or [DEFAULT_TARGET]
-    files = []
-    for t in targets:
-        files.extend(sorted(t.rglob("*.py")) if t.is_dir() else [t])
-    violations = []
-    for f in files:
-        if f.resolve() in {p.resolve() for p in EXEMPT}:
-            continue
-        violations.extend(lint_file(f))
-    for path, lineno, msg in violations:
-        try:
-            shown = path.resolve().relative_to(REPO_ROOT)
-        except ValueError:
-            shown = path
-        print(f"{shown}:{lineno}: {msg}")
-    if violations:
-        print(f"\n{len(violations)} state-dtype violation(s).")
+    from repro.analysis.runner import analyze_sources
+
+    paths = argv[1:] or [str(REPO_ROOT / "src" / "repro")]
+    report = analyze_sources(paths, rules=["state-dtype"])
+    for f in report.findings:
+        print(f"{f.where}:{f.lineno}: {f.message}")
+    if report.findings:
+        print(f"\n{len(report.findings)} state-dtype violation(s).")
         return 1
-    print(f"state-dtype lint: {len(files)} files clean.")
+    print(f"state-dtype lint: {report.files_analyzed} files clean.")
     return 0
 
 
